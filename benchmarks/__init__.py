@@ -1,0 +1,16 @@
+"""Benchmarks — one module per paper table/figure + the roofline harness.
+
+=====================  ==========================================
+module                 paper artifact
+=====================  ==========================================
+bench_area             Table II  (area breakdown, default configs)
+bench_workloads        Table III (exec time + relative EDAP)
+bench_ks_traffic       Fig. 4    (KS transfer vs ℓ, ARK method)
+bench_mapping          Fig. 6    (mapping-method sweep, 4×4/8×8)
+bench_limbdup          Fig. 7/8  (limb-dup traffic cut + sensitivity)
+bench_limbdup_hlo      Fig. 7 from REAL compiled shard_map HLO bytes
+bench_scaling          Fig. 9    (4→64 cores, 1×/2× NoP bandwidth)
+bench_ntt              NTT/BConv kernel micro-bench (CPU measured)
+roofline               EXPERIMENTS.md §Roofline from the dry-run JSONs
+=====================  ==========================================
+"""

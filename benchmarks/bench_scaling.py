@@ -1,0 +1,43 @@
+"""Fig. 9: workload performance scaling 4→64 cores at fixed bisection/HBM
+bandwidth (and with doubled NoP bandwidth), 8 NTTU submodules per core."""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import cost_model as C
+from repro.core.mapping import ClusterMap
+from repro.workloads import traces as W
+
+MESHES = {4: (2, 2), 8: (2, 4), 16: (4, 4), 32: (4, 8), 64: (8, 8)}
+
+
+def sweep(workload: str, bw_mult: float = 1.0):
+    tr = W.WORKLOADS[workload]()
+    div = W.REPORT_DIVISOR[workload]
+    out = []
+    for n, (dx, dy) in MESHES.items():
+        cm = ClusterMap(dx, dy, max(dx // 2, 1), max(dy // 2, 1))
+        pkg = C.PackageConfig(cm=cm, lanes_per_core=128,   # fixed 8 submodules
+                              bisection_bw=2e12 * bw_mult)
+        cb = C.estimate(tr, pkg, limb_dup="auto")
+        out.append({"cores": n, "t_ms": cb.t_total / div * 1e3,
+                    "bound": max(("compute", cb.t_compute), ("nop", cb.t_nop),
+                                 ("hbm", cb.t_hbm), key=lambda kv: kv[1])[0]})
+    base = out[0]["t_ms"]
+    for r in out:
+        r["speedup_vs_4c"] = round(base / r["t_ms"], 2)
+        r["t_ms"] = round(r["t_ms"], 3)
+    return out
+
+
+def main():
+    print("name,bw,workload,cores,t_ms,speedup_vs_4c,bound")
+    for wl in ("Boot", "ResNet", "HELR1024"):
+        for bw in (1.0, 2.0):
+            for r in sweep(wl, bw):
+                print(f"fig9,{bw}x,{wl},{r['cores']},{r['t_ms']},"
+                      f"{r['speedup_vs_4c']},{r['bound']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Table III: workload execution times and relative EDAP for 4/16/64-core
+CiFHER default configurations (cost model over paper-scale traces)."""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import area_model as A, cost_model as C
+from repro.workloads import traces as W
+
+PAPER_MS = {   # CLake+ / ARK reference rows from Table III for context
+    "Boot": {4: 0.62, 16: 0.64, 64: 0.73},
+    "ResNet": {4: 194, 16: 189, 64: 222},
+    "Sort": {4: 2282, 16: 2328, 64: 2683},
+    "HELR256": {4: 3.34, 16: 3.55, 64: 4.09},
+    "HELR1024": {4: 5.16, 16: 5.50, 64: 6.20},
+}
+
+
+def rows(cores=(4, 16, 64)):
+    out = []
+    traces = {name: tf() for name, tf in W.WORKLOADS.items()}
+    base_edap = {}
+    for name, tr in traces.items():
+        div = W.REPORT_DIVISOR[name]
+        for n in cores:
+            pkg = C.default_package(n)
+            cb = C.estimate(tr, pkg)
+            area = A.package_area(pkg)["total_mm2"]
+            t_ms = cb.t_total / div * 1e3
+            edap = cb.edap(area) / div ** 2
+            if n == cores[0]:
+                base_edap[name] = edap
+            out.append({
+                "workload": name, "cores": n, "t_ms": round(t_ms, 3),
+                "paper_ms": PAPER_MS.get(name, {}).get(n),
+                "t_compute_ms": round(cb.t_compute / div * 1e3, 3),
+                "t_nop_ms": round(cb.t_nop / div * 1e3, 3),
+                "t_hbm_ms": round(cb.t_hbm / div * 1e3, 3),
+                "rel_edap": round(edap / base_edap[name], 2),
+                "energy_j": round(cb.energy / div, 3),
+            })
+    return out
+
+
+def main():
+    print("name,workload,cores,t_ms,paper_ms,rel_edap,bound")
+    for r in rows():
+        bound = max(("compute", r["t_compute_ms"]), ("nop", r["t_nop_ms"]),
+                    ("hbm", r["t_hbm_ms"]), key=lambda kv: kv[1])[0]
+        print(f"table3,{r['workload']},{r['cores']},{r['t_ms']},"
+              f"{r['paper_ms']},{r['rel_edap']},{bound}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Emit the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from the
+dry-run JSONs.  Run after the sweep:
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_tables
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.roofline import CHIPS, SUGGESTION, load_cells
+
+
+def dryrun_table(dryrun_dir="experiments/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        r = json.load(open(path))
+        if "__" not in os.path.basename(path):
+            continue
+        if not r.get("applicable", True):
+            rows.append((r["arch"], r["shape"], r["mesh"], "SKIP", "-", "-",
+                         "-", "-"))
+            continue
+        mem = r.get("memory") or {}
+        rows.append((
+            r["arch"], r["shape"], r["mesh"],
+            "OK" if r.get("ok") else "FAIL",
+            f"{mem.get('argument_bytes', 0)/2**30:.2f}",
+            f"{mem.get('temp_bytes', 0)/2**30:.2f}",
+            f"{r.get('flops_scaled', r.get('flops', 0)):.3g}",
+            f"{r.get('collective_bytes_scaled', r.get('collectives', {}).get('total', 0))/2**30:.1f}",
+        ))
+    hdr = ("arch", "shape", "mesh", "status", "args GiB/dev",
+           "temp GiB/dev", "HLO flops/dev", "coll GiB/dev")
+    out = ["| " + " | ".join(hdr) + " |",
+           "|" + "---|" * len(hdr)]
+    for row in rows:
+        out.append("| " + " | ".join(str(x) for x in row) + " |")
+    return "\n".join(out)
+
+
+def roofline_table():
+    cells = load_cells()
+    hdr = ("arch", "shape", "compute s", "memory s", "collective s",
+           "dominant", "roofline frac", "model/HLO flops", "next lever")
+    out = ["| " + " | ".join(hdr) + " |", "|" + "---|" * len(hdr)]
+    for c in sorted(cells, key=lambda c: (c["arch"], c["shape"])):
+        lever = SUGGESTION.get((c["kind"], c["dominant"]), "")
+        out.append(
+            f"| {c['arch']} | {c['shape']} | {c['t_compute_s']:.3g} | "
+            f"{c['t_memory_s']:.3g} | {c['t_collective_s']:.3g} | "
+            f"**{c['dominant']}** | {c['roofline_fraction']:.3f} | "
+            f"{c['useful_ratio']:.2f} | {lever} |")
+    return "\n".join(out)
+
+
+def fhe_table(d="experiments/dryrun_fhe"):
+    out = ["| policy | mesh | limb clusters | HLO flops/dev | coll MiB/dev "
+           "| AR MiB | permute MiB | a2a MiB | AG MiB |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(path))
+        if not r.get("ok"):
+            continue
+        c = r["collectives"]
+        out.append(
+            f"| {r['policy']} | {r['mesh']} | {r['limb_clusters']} | "
+            f"{r['flops']:.3g} | {c.get('total', 0)/2**20:.1f} | "
+            f"{c.get('all-reduce', 0)/2**20:.1f} | "
+            f"{c.get('collective-permute', 0)/2**20:.1f} | "
+            f"{c.get('all-to-all', 0)/2**20:.1f} | "
+            f"{c.get('all-gather', 0)/2**20:.1f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("#### Dry-run cells\n")
+        print(dryrun_table())
+    if which in ("all", "roofline"):
+        print("\n#### Roofline (single-pod, 256 chips)\n")
+        print(roofline_table())
+    if which in ("all", "fhe"):
+        print("\n#### FHE key-switching cells (paper scale)\n")
+        print(fhe_table())

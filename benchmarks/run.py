@@ -1,0 +1,51 @@
+"""Aggregate benchmark runner: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip-hlo] [--skip-measured]
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-hlo", action="store_true",
+                    help="skip the subprocess HLO traffic benchmark")
+    ap.add_argument("--skip-measured", action="store_true",
+                    help="skip wall-clock micro-benchmarks")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_area, bench_ks_traffic, bench_limbdup,
+                            bench_mapping, bench_scaling, bench_workloads,
+                            roofline)
+
+    sections = [
+        ("Table II (area)", bench_area.main),
+        ("Table III (workloads)", bench_workloads.main),
+        ("Fig. 4 (KS traffic vs ell)", bench_ks_traffic.main),
+        ("Fig. 6 (mapping sweep)", bench_mapping.main),
+        ("Fig. 7/8 (limb duplication)", bench_limbdup.main),
+        ("Fig. 9 (scaling)", bench_scaling.main),
+        ("Roofline (dry-run cells)", roofline.main),
+    ]
+    if not args.skip_hlo:
+        from benchmarks import bench_limbdup_hlo
+        sections.append(("Fig. 7 from compiled HLO", bench_limbdup_hlo.main))
+    if not args.skip_measured:
+        from benchmarks import bench_ntt
+        sections.append(("NTT micro-bench (measured)", bench_ntt.main))
+
+    for title, fn in sections:
+        print(f"\n### {title}")
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # keep the sweep alive; report the failure
+            print(f"BENCH-ERROR {title}: {type(e).__name__}: {e}")
+        print(f"### done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Paper §IV/§V live: cluster-mapped NTT + BConv on 8 simulated chiplets.
+
+    PYTHONPATH=src python examples/distributed_mapping_demo.py
+
+Spawns a subprocess with 8 fake XLA devices, runs the block-clustered
+distributed NTT (both dataflows) and BConv (ARK redistribution vs limb
+duplication), verifies exactness, and prints the measured collective wire
+bytes from the compiled HLO — the limb-duplication claim, live.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.subproc import run_with_devices
+
+print("verifying distributed correctness on 8 fake chiplets...")
+out = run_with_devices(8, "repro.core._dist_selftest", "8", "correctness")
+assert out["ok"]
+print(f"  OK map={out['map']} (bit-exact vs single-device oracles)")
+
+# the ModUp shape (12 input limbs → 48 output limbs, paper §V-A Fig. 4):
+# output limbs dominate, so Eq. 3 holds and limb duplication wins
+print("measuring NoP traffic from compiled HLO (ModUp: ell=12 → K=48, N=2048)...")
+t = run_with_devices(8, "repro.core._dist_selftest", "8", "traffic",
+                     "12", "48", "2048")
+ark = t["bconv_ark"]["total"]
+dup = t["bconv_limbdup"]["total"]
+ntt2 = t["ntt_baseline"]["total"]
+ntt1 = t["ntt_fourstep"]["total"]
+print(f"  BConv  ARK redistribution : {ark/1024:8.1f} KiB on the wire")
+print(f"  BConv  limb duplication   : {dup/1024:8.1f} KiB "
+      f"({100*(1-dup/ark):.0f}% less, gather-only: "
+      f"{'all-to-all' not in t['bconv_limbdup']})")
+print(f"  NTT    2-exchange baseline: {ntt2/1024:8.1f} KiB")
+print(f"  NTT    single mid-shuffle : {ntt1/1024:8.1f} KiB "
+      f"({100*(1-ntt1/ntt2):.0f}% less — paper Fig. 1 dataflow)")
+print(f"  Eq. 3 beneficial here: {t['eq3_beneficial']}")
+print("distributed mapping demo OK")

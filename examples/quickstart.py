@@ -1,0 +1,45 @@
+"""Quickstart: encrypted arithmetic with the CiFHER-style CKKS core.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Encrypts two vectors, runs HAdd / HMult(+relinearize+rescale) / HRot through
+the 32-bit RNS-CKKS pipeline (paper §II-B, §III-C) and checks the decrypted
+results against plaintext math.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import ckks, encoding as enc, keys as K, params as prm
+
+p = prm.test_small()                 # N=2^10, L=6, hybrid KS with dnum=3
+print(f"CKKS params: N={p.N}, L={p.L}, K={p.K}, dnum={p.dnum} "
+      f"(32-bit primes, paper §III-C)")
+
+keys = K.keygen(p, rotations=(1, 4), seed=0)
+scale = float(p.q[-1])
+
+rng = np.random.default_rng(0)
+z1 = rng.normal(size=8) + 1j * rng.normal(size=8)
+z2 = rng.normal(size=8) + 1j * rng.normal(size=8)
+
+ct1 = K.encrypt(enc.encode(z1, scale, p.q, p.N), scale, keys.sk, p.q, p.N)
+ct2 = K.encrypt(enc.encode(z2, scale, p.q, p.N), scale, keys.sk, p.q, p.N)
+
+
+def show(label, ct, want, n=8):
+    got = enc.decode(K.decrypt(ct, keys.sk), ct.scale, ct.basis, p.N, n)
+    err = np.max(np.abs(got - want))
+    print(f"{label:18s} err={err:.2e}  level={ct.level}")
+    assert err < 1e-2
+
+
+show("enc/dec", ct1, z1)
+show("HAdd", ckks.hadd(ct1, ct2), z1 + z2)
+show("HMult+relin+RS", ckks.rescale(ckks.hmult(ct1, ct2, keys), p, times=1),
+     z1 * z2)
+show("HRot(4)", ckks.hrot(ct1, 4, keys),
+     np.roll(np.concatenate([z1, np.zeros(p.slots - 8)]), -4)[:8])
+print("quickstart OK")

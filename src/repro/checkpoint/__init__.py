@@ -1,0 +1,5 @@
+"""Sharded checkpointing: per-host npz shards + JSON manifest, atomic rename,
+async writer thread, integrity hashes, and elastic reshard-on-load."""
+from .manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

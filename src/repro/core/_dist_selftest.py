@@ -1,0 +1,110 @@
+"""Multi-device self-test + traffic measurement entry point.
+
+Run as ``python -m repro.core._dist_selftest <n_devices> <mode>`` under
+``--xla_force_host_platform_device_count``; prints one JSON line.
+
+Modes:
+  correctness  — distributed NTT (both dataflows) and BConv (both methods)
+                 must equal the single-device oracles bit-exactly.
+  traffic      — per-device collective wire bytes of the ARK vs limb-dup
+                 BConv programs and both NTT dataflows (Fig. 7 reproduction).
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import numpy as np
+
+
+def main() -> None:
+    n_dev = int(sys.argv[1]) if len(sys.argv) > 1 else 8
+    mode = sys.argv[2] if len(sys.argv) > 2 else "correctness"
+    ell = int(sys.argv[3]) if len(sys.argv) > 3 else 8
+    K = int(sys.argv[4]) if len(sys.argv) > 4 else 4
+    N = int(sys.argv[5]) if len(sys.argv) > 5 else 256
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import distributed as D
+    from repro.core import mapping as M
+    from repro.core import ntt as nttm
+    from repro.core import rns
+    from repro.launch import hlo
+
+    assert len(jax.devices()) == n_dev, (len(jax.devices()), n_dev)
+    # square-ish cluster map: limb clusters × block size = n_dev
+    lc = 1
+    while lc * lc < n_dev:
+        lc *= 2
+    cm = M.ClusterMap(lc, n_dev // lc, 1, n_dev // lc)
+    mesh = cm.make_mesh()
+    basis = tuple(rns.gen_ntt_primes(ell, N))
+    dst = tuple(rns.gen_ntt_primes(K, N, exclude=basis))
+    rng = np.random.default_rng(0)
+    x = np.stack([rng.integers(0, q, N, dtype=np.int64).astype(np.uint32)
+                  for q in basis])
+    out: dict = {"map": cm.name, "n_dev": n_dev, "ell": ell, "K": K, "N": N}
+
+    if mode == "correctness":
+        from repro.kernels.bconv import ref as bref
+        c = nttm.stacked_ntt_consts(basis, N)
+        want = np.asarray(nttm.ntt(jnp.asarray(x), c))
+        with jax.set_mesh(mesh):
+            got = np.asarray(D.run_dist_ntt(mesh, jnp.asarray(x), basis))
+            back = np.asarray(D.run_dist_ntt(mesh, jnp.asarray(got), basis,
+                                             forward=False))
+        assert np.array_equal(got, want), "dist_ntt forward"
+        assert np.array_equal(back, x), "dist_ntt inverse"
+        R = 16
+        perm = D.ntt_layout_perm(N, R)
+        cperm = D.coef_layout_perm(N, R, cm.block_size)
+        with jax.set_mesh(mesh):
+            got4 = np.asarray(D.run_dist_ntt_fourstep(
+                mesh, jnp.asarray(x[:, cperm]), basis, R))
+            back4 = np.asarray(D.run_dist_ntt_fourstep(
+                mesh, jnp.asarray(got4), basis, R, forward=False))
+        assert np.array_equal(got4, want[:, perm]), "four-step layout"
+        assert np.array_equal(back4, x[:, cperm]), "four-step inverse"
+        want_bc = bref.bconv_ref(x, basis, dst)
+        with jax.set_mesh(mesh):
+            g1 = np.asarray(D.dist_bconv_ark(mesh, jnp.asarray(x), basis, dst))
+            g2 = np.asarray(D.dist_bconv_limbdup(mesh, jnp.asarray(x), basis, dst))
+        assert np.array_equal(g1, want_bc), "bconv ark"
+        assert np.array_equal(g2, want_bc), "bconv limbdup"
+        out["ok"] = True
+
+    elif mode == "traffic":
+        sharding = NamedSharding(mesh, P("limb", "coef"))
+        spec = jax.ShapeDtypeStruct((ell, N), jnp.uint32)
+        # the distributed NTT needs ℓ divisible by the full device count;
+        # BConv only needs divisibility by the limb-cluster count — measure
+        # each at its natural shape
+        ntt_ell = -(-ell // n_dev) * n_dev
+        ntt_basis = tuple(rns.gen_ntt_primes(ntt_ell, N))
+        ntt_spec = jax.ShapeDtypeStruct((ntt_ell, N), jnp.uint32)
+
+        def measure(fn, in_spec=spec):
+            with jax.set_mesh(mesh):
+                comp = jax.jit(fn, in_shardings=sharding).lower(in_spec).compile()
+            return hlo.collective_summary(comp.as_text())
+
+        out["bconv_ark"] = measure(
+            lambda xx: D.dist_bconv_ark(mesh, xx, basis, dst))
+        out["bconv_limbdup"] = measure(
+            lambda xx: D.dist_bconv_limbdup(mesh, xx, basis, dst))
+        out["ntt_baseline"] = measure(
+            lambda xx: D.run_dist_ntt(mesh, xx, ntt_basis), ntt_spec)
+        out["ntt_fourstep"] = measure(
+            lambda xx: D.run_dist_ntt_fourstep(mesh, xx, ntt_basis, 16),
+            ntt_spec)
+        out["ntt_ell"] = ntt_ell
+        out["eq3_beneficial"] = D.limbdup_beneficial(ell, K, cm)
+
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,170 @@
+"""Fast base conversion (BConv) — paper §II-C, the 2nd-dominant FHE function.
+
+    BConv_{Q→P}(x)_j = Σ_i [x_i · q̂_i⁻¹]_{q_i} · (q̂_i mod p_j)   (mod p_j)
+
+96 % of the work is the (K×ℓ)·(ℓ×N) modular matrix product against the BConv
+table (the paper's systolic BConvU).  This module implements it HPS-style
+(approximate: result may carry +u·Q for small u ≤ ℓ/2, absorbed by the
+key-switching noise budget — the standard choice in SEAL/Lattigo and ARK).
+
+The accumulation strategy mirrors what the Pallas kernel does on TPU: per-term
+Shoup products reduced to [0, q), then a **lazy 16-bit-column sum** (split each
+term into hi16/lo16, sum columns in u32 — exact for ℓ < 2¹⁶ — recombine into a
+64-bit (hi, lo) pair, one Barrett reduction at the end).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import modmath as mm
+from . import ntt as nttm
+from . import poly as pl
+from . import rns
+from . import trace
+
+_M16 = 0xFFFF  # Python int: weak-typed, safe inside Pallas kernels
+
+# ----------------------------------------------------------------------------
+# Distribution policy hook (paper §IV/§V): when a mapping_scope is active,
+# every BConv constrains its input/output layouts per the policy — this is
+# how the global CKKS dataflow compiles into ARK-redistribution or
+# limb-duplication collectives at paper scale (launch/dryrun_fhe.py).
+# ----------------------------------------------------------------------------
+import contextvars as _ctxv
+
+_active_policy = _ctxv.ContextVar("bconv_policy", default=None)
+
+
+class mapping_scope:
+    def __init__(self, mesh, policy):
+        self.value = (mesh, policy)
+
+    def __enter__(self):
+        self._tok = _active_policy.set(self.value)
+        return self
+
+    def __exit__(self, *exc):
+        _active_policy.reset(self._tok)
+        return False
+
+
+def _constrain(x, spec_fn):
+    scope = _active_policy.get()
+    if scope is None:
+        return x
+    import jax
+    from jax.sharding import NamedSharding
+    mesh, policy = scope
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_fn(policy, mesh)))
+
+
+def lazy_sum_mod(terms, q, mu_hi, mu_lo, axis: int):
+    """Σ terms mod q for terms already reduced to [0, q); exact for < 2¹⁶ terms.
+
+    ``q``/``mu_*`` must broadcast against the sum's shape.
+    """
+    lo16 = jnp.sum(terms & _M16, axis=axis, dtype=jnp.uint32)
+    hi16 = jnp.sum(terms >> 16, axis=axis, dtype=jnp.uint32)
+    lo = ((hi16 & _M16) << 16) + lo16
+    carry = (lo < lo16).astype(jnp.uint32)
+    hi = (hi16 >> 16) + carry
+    return mm.barrett_reduce_wide(hi, lo, q, mu_hi, mu_lo)
+
+
+def bconv_raw(x, src: tuple[int, ...], dst: tuple[int, ...]):
+    """(…, ℓ, N) coeff-domain residues in ``src`` → (…, K, N) in ``dst``."""
+    trace.record("bconv_mul", len(src) * len(dst), x.shape[-1])
+    trace.record("bconv_in", len(src), x.shape[-1])
+    trace.record("bconv_out", len(dst), x.shape[-1])
+    tab = rns.bconv_tables(tuple(src), tuple(dst))
+    cs = pl.consts(tuple(src), x.shape[-1])
+    cd = pl.consts(tuple(dst), x.shape[-1])
+    # step 1: t_i = x_i · q̂_i⁻¹ mod q_i (limb-wise Shoup constant)
+    t = mm.mulmod_shoup(x, jnp.asarray(tab.qhat_inv)[:, None],
+                        jnp.asarray(tab.qhat_inv_shoup)[:, None], cs.q)
+    t = _constrain(t, lambda pol, mesh: pol.bconv_input(mesh))
+    # step 2: the K×ℓ table product — per-term Shoup reduce, lazy column sum.
+    # terms[..., j, i, :] = t_i · table[j, i] mod p_j
+    w = jnp.asarray(tab.table)[:, :, None]          # (K, ℓ, 1)
+    ws = jnp.asarray(tab.table_shoup)[:, :, None]
+    qd = cd.q[:, None]                              # (K, 1, 1)
+    terms = mm.mulmod_shoup(t[..., None, :, :], w, ws, qd)
+    out = lazy_sum_mod(terms, cd.q, cd.mu_hi, cd.mu_lo, axis=-2)
+    return _constrain(out, lambda pol, mesh: pol.bconv_output(mesh))
+
+
+def bconv(x: pl.RnsPoly, dst: tuple[int, ...]) -> pl.RnsPoly:
+    assert x.domain == pl.COEFF, "BConv operates on coefficient-domain limbs"
+    return pl.RnsPoly(bconv_raw(x.data, x.basis, dst), tuple(dst), pl.COEFF)
+
+
+def centered_lift_single(x, src_q: int, dst: tuple[int, ...]):
+    """Exact centered lift of a *single-limb* residue vector into ``dst``.
+
+    Used by bootstrapping's ModRaise (u = 0 case of BConv): values in
+    [0, q₁) are centered to (-q₁/2, q₁/2] and embedded exactly mod each dst
+    prime.  x: (…, N) u32 → (…, K, N).
+    """
+    half = jnp.uint32(src_q // 2)
+    is_neg = x > half                                   # maps to negative lift
+    mag_neg = jnp.uint32(src_q) - x                     # |value| when negative
+    outs = []
+    for p in dst:
+        pos = jnp.where(x >= jnp.uint32(p), x % jnp.uint32(p), x) if src_q >= p else x
+        neg = jnp.uint32(p) - jnp.where(
+            mag_neg >= jnp.uint32(p), mag_neg % jnp.uint32(p), mag_neg)
+        neg = jnp.where(neg == jnp.uint32(p), jnp.uint32(0), neg)
+        outs.append(jnp.where(is_neg, neg, pos))
+    return jnp.stack(outs, axis=-2)
+
+
+# ----------------------------------------------------------------------------
+# ModUp / ModDown (hybrid key-switching legs, Han-Ki [36])
+# ----------------------------------------------------------------------------
+
+def mod_up_digit(digit: pl.RnsPoly, full_q: tuple[int, ...],
+                 p: tuple[int, ...],
+                 digit_ntt: pl.RnsPoly | None = None) -> pl.RnsPoly:
+    """Digit limbs (coeff domain, basis Q_j) → basis Q_ℓ ∪ P (NTT domain).
+
+    Limbs already present in Q_j are reused from ``digit_ntt`` (the original
+    NTT-domain data) — only the BConv-produced limbs pay an NTT.  The output
+    limb order is q₁..q_ℓ then p₁..p_K.
+    """
+    dst_other = tuple(q for q in full_q if q not in digit.basis) + tuple(p)
+    conv = bconv_raw(digit.data, digit.basis, dst_other)
+    conv_ntt = pl.RnsPoly(conv, dst_other, pl.COEFF).to_ntt()
+    if digit_ntt is None:
+        digit_ntt = digit.to_ntt()
+    rows = []
+    it = iter(range(len(dst_other)))
+    for q in full_q:
+        if q in digit.basis:
+            rows.append(digit_ntt.data[..., digit.basis.index(q), :])
+        else:
+            rows.append(conv_ntt.data[..., next(it), :])
+    for _ in p:
+        rows.append(conv_ntt.data[..., next(it), :])
+    return pl.RnsPoly(jnp.stack(rows, axis=-2), tuple(full_q) + tuple(p), pl.NTT)
+
+
+def mod_down(x: pl.RnsPoly, q_basis: tuple[int, ...],
+             p: tuple[int, ...]) -> pl.RnsPoly:
+    """⌊x / P⌉ : basis Q∪P (NTT domain) → basis Q (NTT domain).
+
+    x is split into its P-part (iNTT → BConv into Q → NTT) which is subtracted,
+    then multiplied by P⁻¹ mod q_i.
+    """
+    ellq = len(q_basis)
+    assert x.basis == tuple(q_basis) + tuple(p) and x.domain == pl.NTT
+    xq = pl.RnsPoly(x.data[..., :ellq, :], tuple(q_basis), pl.NTT)
+    xp = pl.RnsPoly(x.data[..., ellq:, :], tuple(p), pl.NTT)
+    xp_coeff = xp.to_coeff()
+    xp_in_q = bconv(xp_coeff, tuple(q_basis)).to_ntt()
+    P = 1
+    for pi in p:
+        P *= pi
+    pinv = np.array([pow(P % q, q - 2, q) for q in q_basis], dtype=np.uint32)
+    return (xq - xp_in_q).mul_scalar(pinv)

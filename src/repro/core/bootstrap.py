@@ -1,0 +1,262 @@
+"""CKKS bootstrapping (paper §VI-B "Boot" workload).
+
+Pipeline (Cheon et al. / combining [12],[18] as §V-B describes):
+
+    ModRaise   — exact centered lift of the exhausted ciphertext (1 limb)
+                 into the full basis Q_L; plaintext becomes m + q₁·I.
+    CoeffToSlot— homomorphic multiplication by E⁻¹ = Eᴴ/n (the inverse
+                 canonical embedding), BSGS with hoisted baby rotations and
+                 optionally minimum-key-switching giant steps (§V-B);
+                 conjugation splits the two coefficient halves.
+    EvalMod    — Chebyshev approximation of (1/2π)·sin(2πx) on [-K, K],
+                 depth-log recursive T_i evaluation; removes the q₁·I term.
+    SlotToCoeff— homomorphic multiplication by E (forward embedding).
+
+Scale discipline: the encoding scale is pinned to Δ = q₁ so that slot values
+after ModRaise read I + m/Δ directly; every constant multiplication encodes
+its constant at exactly the current top prime, making rescaling drift-free
+(§III-C's high-precision claim at 32-bit words relies on this bookkeeping).
+
+Minimum key-switching (§V-B): the giant-step rotations form the arithmetic
+progression {bs, 2bs, …}; with ``use_min_ks=True`` they are evaluated with the
+single evk_bs via the recursive accumulation
+    Σ_g rot_{g·bs}(inner_g) = inner_0 + rot_bs(inner_1 + rot_bs(inner_2 + …)),
+cutting evk HBM traffic by the giant count at equal KS count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import bconv as bc
+from . import ckks
+from . import encoding as enc
+from . import keys as keysm
+from . import poly as pl
+from . import trace
+from .params import CkksParams
+
+
+# ----------------------------------------------------------------------------
+# Context (matrices, rotation keys, Chebyshev coefficients)
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BootContext:
+    params: CkksParams
+    keys: keysm.KeySet
+    K_range: int                   # EvalMod input bound (|I + m/Δ| < K)
+    cheb_coeffs: np.ndarray        # Chebyshev series of sin(2πKu)/2π on [-1,1]
+    bs: int                        # BSGS baby-step count
+    cts_diags: dict[int, np.ndarray]
+    stc_diags: dict[int, np.ndarray]
+    use_min_ks: bool = True
+
+    @property
+    def slots(self) -> int:
+        return self.params.slots
+
+
+def _diagonals(M: np.ndarray) -> dict[int, np.ndarray]:
+    n = M.shape[0]
+    idx = np.arange(n)
+    return {d: M[idx, (idx + d) % n] for d in range(n)}
+
+
+def _bsgs_rotations(n: int, bs: int) -> tuple[list[int], list[int]]:
+    babies = list(range(1, bs))
+    giants = [g * bs for g in range(1, -(-n // bs))]
+    return babies, giants
+
+
+def setup_bootstrap(params: CkksParams, hamming: int = 8, K_range: int = 4,
+                    cheb_deg: int = 47, seed: int = 0,
+                    use_min_ks: bool = True) -> BootContext:
+    n = params.slots
+    bs = 1
+    while bs * bs < n:
+        bs *= 2
+    babies, giants = _bsgs_rotations(n, bs)
+    rotations = tuple(babies + ([bs] if use_min_ks else giants))
+    keys = keysm.keygen(params, rotations=rotations, conj=True, seed=seed,
+                        hamming=hamming)
+    if not use_min_ks:
+        keysm.add_galois_keys(keys, tuple(giants), seed=seed + 1)
+
+    E = enc._emb_matrix(params.N)              # z = E·c (decode direction)
+    Einv = E.conj().T / n                      # c = E⁻¹·z
+    f = lambda u: np.sin(2 * np.pi * K_range * u) / (2 * np.pi)
+    cheb = np.polynomial.chebyshev.Chebyshev.interpolate(f, cheb_deg,
+                                                         domain=[-1, 1])
+    # sanity: approximation error must be far below the target precision
+    grid = np.linspace(-1, 1, 4001)
+    err = np.max(np.abs(cheb(grid) - f(grid)))
+    assert err < 1e-5, f"Chebyshev deg {cheb_deg} too low for K={K_range}: {err}"
+    # fold the ½ of the re/im split into the CtS matrix (saves one level;
+    # the ×(±i) halves use the free monomial X^{N/2} trick instead)
+    return BootContext(params=params, keys=keys, K_range=K_range,
+                       cheb_coeffs=cheb.coef, bs=bs,
+                       cts_diags=_diagonals(Einv * 0.5), stc_diags=_diagonals(E),
+                       use_min_ks=use_min_ks)
+
+
+# ----------------------------------------------------------------------------
+# Constant multiplications (drift-free scale bookkeeping)
+# ----------------------------------------------------------------------------
+
+def mul_const_vec(ct: ckks.Ciphertext, vec: np.ndarray,
+                  params: CkksParams) -> ckks.Ciphertext:
+    """ct ⊙ complex constant vector, encoded at exactly the top prime."""
+    q_top = float(ct.basis[-1])
+    pt = enc.encode(np.asarray(vec, dtype=np.complex128), q_top, ct.basis,
+                    params.N)
+    out = ckks.pmult(ct, pl.RnsPoly(jnp.asarray(pt), ct.basis, pl.COEFF), q_top)
+    return ckks.rescale(out, params, times=1)
+
+
+# ----------------------------------------------------------------------------
+# BSGS homomorphic linear transform (one level)
+# ----------------------------------------------------------------------------
+
+def linear_transform(ct: ckks.Ciphertext, diags: dict[int, np.ndarray],
+                     ctx: BootContext) -> ckks.Ciphertext:
+    """out slots = M · slots, M given by its diagonals.  One rescale level.
+
+    Baby rotations are hoisted (single ModUp); giant steps use minimum
+    key-switching when enabled.
+    """
+    n, bs = ctx.slots, ctx.bs
+    params, keys = ctx.params, ctx.keys
+    q_top = float(ct.basis[-1])
+    n_giants = -(-n // bs)
+    babies = ckks.hrot_hoisted(ct, list(range(bs)), keys)
+
+    def encode_diag(vec: np.ndarray) -> pl.RnsPoly:
+        pt = enc.encode(vec, q_top, ct.basis, params.N)
+        return pl.RnsPoly(jnp.asarray(pt), ct.basis, pl.COEFF).to_ntt()
+
+    inners: list[ckks.Ciphertext] = []
+    for g in range(n_giants):
+        acc = None
+        for b in range(bs):
+            d = g * bs + b
+            if d >= n:
+                break
+            vec = np.roll(diags[d], g * bs)     # pre-rotate by -giant amount
+            if not np.any(np.abs(vec) > 1e-14):
+                continue
+            term = ckks.pmult(babies[b], encode_diag(vec), q_top)
+            acc = term if acc is None else ckks.hadd(acc, term)
+        if acc is None:
+            acc = ckks.pmult(babies[0], encode_diag(np.zeros(n)), q_top)
+        inners.append(acc)
+
+    if ctx.use_min_ks:
+        # §V-B: fold giants right-to-left with the single evk_bs
+        out = inners[-1]
+        for g in range(n_giants - 2, -1, -1):
+            out = ckks.hadd(inners[g], ckks.hrot(out, bs, keys))
+    else:
+        out = inners[0]
+        for g in range(1, n_giants):
+            out = ckks.hadd(out, ckks.hrot(inners[g], g * bs, keys))
+    return ckks.rescale(out, params, times=1)
+
+
+# ----------------------------------------------------------------------------
+# EvalMod: Chebyshev sine (depth-log recursive T_i)
+# ----------------------------------------------------------------------------
+
+def _align(cts: list[ckks.Ciphertext]) -> list[ckks.Ciphertext]:
+    ell = min(c.level for c in cts)
+    return [ckks.level_drop(c, ell) for c in cts]
+
+
+def eval_chebyshev(ct_u, coeffs: np.ndarray, ctx: BootContext):
+    """p(u) = Σ c_j T_j(u) for u already in [-1, 1]."""
+    params, keys = ctx.params, ctx.keys
+    deg = len(coeffs) - 1
+    T: dict[int, ckks.Ciphertext] = {1: ct_u}
+
+    def get(i: int) -> ckks.Ciphertext:
+        if i in T:
+            return T[i]
+        a, b = -(-i // 2), i // 2
+        ta, tb = _align([get(a), get(b)])
+        prod = ckks.rescale(ckks.hmult(ta, tb, keys), params, times=1)
+        prod = ckks.hadd(prod, prod)            # 2·T_a·T_b
+        if a == b:
+            out = ckks.add_const(prod, -1.0)    # T_{2a} = 2T_a² − 1
+        else:
+            # T_{a+b} = 2T_aT_b − T_{a−b}; scale-matched subtraction
+            out = ckks.add_matched(prod, get(a - b), params, sub=True)
+        T[i] = out
+        return out
+
+    terms = []
+    for j in range(1, deg + 1):
+        if abs(coeffs[j]) < 1e-12:
+            continue
+        terms.append((j, coeffs[j]))
+    # materialize all T_j, combine with scalar coefficients (scale-matched)
+    cts = [get(j) for j, _ in terms]
+    acc = None
+    for (j, cj), tj in zip(terms, cts):
+        term = ckks.mul_const(tj, float(cj), params)
+        acc = term if acc is None else ckks.add_matched(acc, term, params)
+    return ckks.add_const(acc, float(coeffs[0]))
+
+
+def eval_mod(ct, ctx: BootContext):
+    """Remove the q₁·I term: slots I + w → w (w = m/Δ, |w| small)."""
+    u = ckks.mul_const(ct, 1.0 / ctx.K_range, ctx.params)
+    return eval_chebyshev(u, ctx.cheb_coeffs, ctx)
+
+
+# ----------------------------------------------------------------------------
+# ModRaise and the full pipeline
+# ----------------------------------------------------------------------------
+
+def mod_raise(ct: ckks.Ciphertext, params: CkksParams) -> ckks.Ciphertext:
+    """Exact centered lift from basis {q₁} to Q_L (coeff domain)."""
+    assert ct.level == 1, "bootstrap expects a level-1 (exhausted) ciphertext"
+    basis = params.q
+    q1 = ct.basis[0]
+
+    def raise_poly(p: pl.RnsPoly) -> pl.RnsPoly:
+        x = p.to_coeff().data[..., 0, :]
+        lifted = bc.centered_lift_single(x, q1, basis)
+        return pl.RnsPoly(lifted, basis, pl.COEFF)
+
+    trace.record_he("ModRaise")
+    return ckks.Ciphertext(raise_poly(ct.a), raise_poly(ct.b), ct.scale)
+
+
+def coeff_to_slot(ct, ctx: BootContext):
+    """t has the ½ pre-folded; u0 = t + t̄, u1 = −i·t + i·t̄ (monomials)."""
+    N = ctx.params.N
+    t = linear_transform(ct, ctx.cts_diags, ctx)
+    tc = ckks.conjugate(t, ctx.keys)
+    u0 = ckks.hadd(t, tc)
+    u1 = ckks.hadd(ckks.mul_monomial(t, 3 * N // 2),     # −i·t
+                   ckks.mul_monomial(tc, N // 2))        # +i·t̄
+    return u0, u1
+
+
+def slot_to_coeff(u0, u1, ctx: BootContext):
+    u1i = ckks.mul_monomial(u1, ctx.params.N // 2)       # i·u1, free
+    a, b = _align([u0, u1i])
+    return linear_transform(ckks.hadd(a, b), ctx.stc_diags, ctx)
+
+
+def bootstrap(ct: ckks.Ciphertext, ctx: BootContext) -> ckks.Ciphertext:
+    """Level-1 ciphertext (scale = q₁) → refreshed ciphertext at a high level."""
+    trace.record_he("Bootstrap")
+    raised = mod_raise(ct, ctx.params)
+    u0, u1 = coeff_to_slot(raised, ctx)
+    v0 = eval_mod(u0, ctx)
+    v1 = eval_mod(u1, ctx)
+    return slot_to_coeff(v0, v1, ctx)

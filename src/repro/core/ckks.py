@@ -1,0 +1,345 @@
+"""CKKS primitive HE ops (paper §II-B): HAdd, HMult, PMult, HRot, KS, RS.
+
+Key-switching follows the hybrid (Han-Ki) construction used by ARK and
+CiFHER: digit decomposition → ModUp (iNTT · BConv · NTT) → evk inner product →
+ModDown.  This file is the *functional* single-device implementation;
+``repro.core.distributed`` re-expresses the same dataflow as shard_map
+programs under a ClusterMap, and ``repro.kernels`` provides the Pallas paths
+for the two dominant primitives.
+
+Hoisted rotations (shared ModUp across a set of rotations) implement the
+decomposition-reuse that the paper's minimum-key-switching (§V-B) builds on.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+import jax.numpy as jnp
+
+from . import bconv as bc
+from . import poly as pl
+from . import trace
+from .keys import Ciphertext, EvalKey, KeySet
+from .params import CkksParams
+
+
+def _take_limbs(x: pl.RnsPoly, idx: list[int], new_basis: tuple[int, ...]) -> pl.RnsPoly:
+    data = jnp.take(x.data, jnp.asarray(np.array(idx, dtype=np.int32)), axis=-2)
+    return pl.RnsPoly(data, new_basis, x.domain)
+
+
+def _evk_at_level(evk: EvalKey, params: CkksParams,
+                  ell: int) -> list[tuple[pl.RnsPoly, pl.RnsPoly]]:
+    """Slice each digit key to the current basis Q_ℓ ∪ P."""
+    idx = list(range(ell)) + [params.L + k for k in range(params.K)]
+    basis = params.q[:ell] + params.p
+    out = []
+    ndig = len(params.digit_bases(ell))
+    for aj, bj in zip(evk.a()[:ndig], evk.b[:ndig]):
+        out.append((_take_limbs(aj, idx, basis), _take_limbs(bj, idx, basis)))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# Key-switching
+# ----------------------------------------------------------------------------
+
+def mod_up_all_digits(d: pl.RnsPoly, params: CkksParams) -> list[pl.RnsPoly]:
+    """Digit-decompose + ModUp: d ∈ R_{Q_ℓ} (NTT) → [R_{Q_ℓ∪P} (NTT)] per digit.
+
+    The digit's own limbs reuse the original NTT-domain data (no re-NTT of
+    copied limbs) — only BConv outputs pay forward transforms.
+    """
+    ell = d.ell
+    d_ntt = d.to_ntt()
+    d_coeff = d.to_coeff()
+    full_q = params.q[:ell]
+    exts = []
+    start = 0
+    for dj in params.digit_bases(ell):
+        sl = slice(start, start + len(dj))
+        digit = pl.RnsPoly(d_coeff.data[..., sl, :], dj, pl.COEFF)
+        digit_ntt = pl.RnsPoly(d_ntt.data[..., sl, :], dj, pl.NTT)
+        exts.append(bc.mod_up_digit(digit, full_q, params.p, digit_ntt))
+        start += len(dj)
+    return exts
+
+
+def ks_inner(exts: list[pl.RnsPoly], evk: EvalKey, params: CkksParams,
+             ell: int) -> tuple[pl.RnsPoly, pl.RnsPoly]:
+    """Σ_j ext_j ⊙ evk_j over Q_ℓ∪P, then ModDown by P.  Returns (ka, kb)."""
+    pairs = _evk_at_level(evk, params, ell)
+    # PRNG evk (§V-B): only the b halves hit memory; a is re-expanded on-chip.
+    trace.record("evk_load_bytes", 1,
+                 len(pairs) * (ell + params.K) * params.N * 4)
+    trace.record_he("KS")
+    acc_a = acc_b = None
+    for ext, (aj, bj) in zip(exts, pairs):
+        ta, tb = ext * aj, ext * bj
+        acc_a = ta if acc_a is None else acc_a + ta
+        acc_b = tb if acc_b is None else acc_b + tb
+    ka = bc.mod_down(acc_a, params.q[:ell], params.p)
+    kb = bc.mod_down(acc_b, params.q[:ell], params.p)
+    return ka, kb
+
+
+def key_switch(d: pl.RnsPoly, evk: EvalKey,
+               params: CkksParams) -> tuple[pl.RnsPoly, pl.RnsPoly]:
+    """KS(d, evk): (ka, kb) with kb − ka·s ≈ d·s′ (paper §II-B)."""
+    return ks_inner(mod_up_all_digits(d, params), evk, params, d.ell)
+
+
+# ----------------------------------------------------------------------------
+# Primitive HE ops
+# ----------------------------------------------------------------------------
+
+def hadd(c1: Ciphertext, c2: Ciphertext) -> Ciphertext:
+    # tolerate the small multiplicative scale drift of ~2⁻¹³ per rescale that
+    # single-prime test chains accumulate (primes differ by ≲0.01 %)
+    assert abs(c1.scale - c2.scale) / c1.scale < 1e-3, \
+        f"scale mismatch {c1.scale} vs {c2.scale}"
+    return Ciphertext(c1.a + c2.a, c1.b + c2.b, c1.scale)
+
+
+def hsub(c1: Ciphertext, c2: Ciphertext) -> Ciphertext:
+    return Ciphertext(c1.a - c2.a, c1.b - c2.b, c1.scale)
+
+
+def pmult(ct: Ciphertext, pt: pl.RnsPoly, pt_scale: float) -> Ciphertext:
+    """ct ⊙ plaintext (NTT domain)."""
+    p = pt.to_ntt()
+    return Ciphertext(ct.a.to_ntt() * p, ct.b.to_ntt() * p, ct.scale * pt_scale)
+
+
+def padd(ct: Ciphertext, pt: pl.RnsPoly) -> Ciphertext:
+    """ct + plaintext already encoded at ct.scale."""
+    return Ciphertext(ct.a, ct.b.to_ntt() + pt.to_ntt(), ct.scale)
+
+
+def hmult(c1: Ciphertext, c2: Ciphertext, keys: KeySet) -> Ciphertext:
+    """HMult = (a₁b₂+a₂b₁, b₁b₂) + KS(a₁a₂, evk_×); rescale NOT included."""
+    trace.record_he("HMult")
+    a1, b1 = c1.a.to_ntt(), c1.b.to_ntt()
+    a2, b2 = c2.a.to_ntt(), c2.b.to_ntt()
+    d0 = b1 * b2
+    d1 = (a1 * b2) + (a2 * b1)
+    d2 = a1 * a2
+    ka, kb = key_switch(d2, keys.relin, keys.params)
+    return Ciphertext(d1 + ka, d0 + kb, c1.scale * c2.scale)
+
+
+def square(ct: Ciphertext, keys: KeySet) -> Ciphertext:
+    a, b = ct.a.to_ntt(), ct.b.to_ntt()
+    d0 = b * b
+    d1 = (a * b) + (a * b)
+    ka, kb = key_switch(a * a, keys.relin, keys.params)
+    return Ciphertext(d1 + ka, d0 + kb, ct.scale * ct.scale)
+
+
+def hrot(ct: Ciphertext, r: int, keys: KeySet) -> Ciphertext:
+    """HRot = (0, φ_r(b)) + KS(φ_r(a), evk_r): rotates slots left by r."""
+    g = pl.galois_elt(r, ct.a.N)
+    return _rot_by_gelt(ct, g, keys)
+
+
+def conjugate(ct: Ciphertext, keys: KeySet) -> Ciphertext:
+    return _rot_by_gelt(ct, 2 * ct.a.N - 1, keys)
+
+
+def mul_const(ct: Ciphertext, value: float, params: CkksParams) -> Ciphertext:
+    """ct × scalar with drift-free scale: the constant is encoded at exactly
+    the level's top prime, so the following rescale restores ct.scale."""
+    trace.record_he("PMultConst")
+    ell = ct.level
+    q_top = float(ct.basis[-1])
+    c = ct.a.c()
+    enc = np.array([round(value * q_top) % q for q in ct.basis],
+                   dtype=np.uint32)
+    a = ct.a.to_ntt().mul_scalar(enc)
+    b = ct.b.to_ntt().mul_scalar(enc)
+    return rescale(Ciphertext(a, b, ct.scale * q_top), params, times=1)
+
+
+def mul_monomial(ct: Ciphertext, power: int) -> Ciphertext:
+    """Exact multiplication by X^power (negacyclic) — free: no level, no KS.
+
+    In the natural-order NTT domain this is the pointwise constant vector
+    ψ^{(2k+1)·power} mod q.  power = N/2 multiplies every slot by i (since
+    X^{N/2}(ζ^{5^j}) = i^{5^j} = i); power = 3N/2 by −i.  Used by
+    bootstrapping's re/im splitting to avoid two rescale levels.
+    """
+    N = ct.a.N
+    from . import rns as rns_mod
+
+    def mono_vec(basis):
+        cols = []
+        for q in basis:
+            psi = rns_mod.find_psi(q, N)
+            k = np.arange(N, dtype=np.int64)
+            vals = np.array([pow(psi, int((2 * kk + 1) * power % (2 * N)), q)
+                             for kk in k], dtype=np.uint32)
+            cols.append(vals)
+        return np.stack(cols)
+
+    vec = mono_vec(ct.basis)
+    shoup = np.stack([
+        np.array([(int(v) << 32) // q for v in row], dtype=np.uint32)
+        for row, q in zip(vec, ct.basis)])
+
+    def apply(p: pl.RnsPoly) -> pl.RnsPoly:
+        x = p.to_ntt()
+        from . import modmath as mm
+        data = mm.mulmod_shoup(x.data, jnp.asarray(vec), jnp.asarray(shoup),
+                               x.c().q)
+        return pl.RnsPoly(data, x.basis, pl.NTT)
+
+    return Ciphertext(apply(ct.a), apply(ct.b), ct.scale)
+
+
+def match_scale(ct: Ciphertext, target_scale: float,
+                params: CkksParams) -> Ciphertext:
+    """Bring ct.scale to ``target_scale`` exactly (up to 2⁻³⁰ relative).
+
+    Multiplies by the integer e = round(f·q_top), f = target/current, and
+    rescales once — the standard RNS-CKKS drift correction.  Costs one level.
+    """
+    f = target_scale / ct.scale
+    if abs(f - 1.0) < 1e-9:
+        return ct
+    q_top = ct.basis[-1]
+    e = max(1, round(f * q_top))
+    enc = np.array([e % q for q in ct.basis], dtype=np.uint32)
+    a = ct.a.to_ntt().mul_scalar(enc)
+    b = ct.b.to_ntt().mul_scalar(enc)
+    return rescale(Ciphertext(a, b, ct.scale * e), params, times=1)
+
+
+def add_matched(c1: Ciphertext, c2: Ciphertext, params: CkksParams,
+                sub: bool = False) -> Ciphertext:
+    """Level-aligned, scale-matched add/sub for drift-prone chains (EvalMod).
+
+    The correction (one rescale) is applied to whichever operand has more
+    levels in reserve.
+    """
+    if abs(c1.scale - c2.scale) / c1.scale > 1e-9:
+        if c1.level >= c2.level and c1.level > 1:
+            c1 = match_scale(c1, c2.scale, params)
+        elif c2.level > 1:
+            c2 = match_scale(c2, c1.scale, params)
+    ell = min(c1.level, c2.level)
+    c1, c2 = level_drop(c1, ell), level_drop(c2, ell)
+    return hsub(c1, c2) if sub else hadd(c1, c2)
+
+
+def add_const(ct: Ciphertext, value: float) -> Ciphertext:
+    """ct + scalar (encoded at ct.scale into the constant coefficient...).
+
+    A scalar added to every slot corresponds to the constant polynomial
+    value·Δ (slot-wise constant ⇔ constant coefficient only).
+    """
+    trace.record_he("PAddConst")
+    v = round(value * ct.scale)
+    b = ct.b.to_ntt()
+    N = ct.a.N
+    add_vec = np.zeros(N, dtype=np.int64)
+    add_vec[0] = v
+    data = pl.small_to_rns(add_vec, ct.basis)
+    cpoly = pl.RnsPoly(jnp.asarray(data), ct.basis, pl.COEFF).to_ntt()
+    return Ciphertext(ct.a, b + cpoly, ct.scale)
+
+
+def _rot_by_gelt(ct: Ciphertext, g: int, keys: KeySet) -> Ciphertext:
+    """(φ(a), φ(b)) is valid under φ(s); switch back to s.
+
+    With this paper's convention (decrypt = b − a·s) the switched term enters
+    with a minus sign: ct′ = (−ka, φ(b) − kb), since
+    φ(v) = φ(b) − φ(a)·φ(s) and kb − ka·s ≈ φ(a)·φ(s).
+    """
+    perm = pl.automorphism_perm(ct.a.N, g)
+    a = ct.a.to_ntt().automorphism(perm)
+    b = ct.b.to_ntt().automorphism(perm)
+    ka, kb = key_switch(a, keys.galois_key(g), keys.params)
+    return Ciphertext(-ka, b - kb, ct.scale)
+
+
+# -- hoisted rotations (decomposition reuse; basis of minimum-KS §V-B) --------
+
+def hrot_hoisted(ct: Ciphertext, rotations: list[int],
+                 keys: KeySet) -> list[Ciphertext]:
+    """Rotate one ciphertext by many amounts with a single ModUp.
+
+    φ_g commutes with ModUp (it permutes coefficients limb-wise), so the digit
+    decomposition of ``a`` is computed once and permuted per rotation —
+    the per-rotation cost drops to the evk inner product + ModDown.
+    """
+    N = ct.a.N
+    a, b = ct.a.to_ntt(), ct.b.to_ntt()
+    exts = mod_up_all_digits(a, keys.params)
+    out = []
+    for r in rotations:
+        if r % (N // 2) == 0:
+            out.append(Ciphertext(a, b, ct.scale))
+            continue
+        g = pl.galois_elt(r, N)
+        perm = pl.automorphism_perm(N, g)
+        exts_g = [e.automorphism(perm) for e in exts]
+        ka, kb = ks_inner(exts_g, keys.galois_key(g), keys.params, a.ell)
+        out.append(Ciphertext(-ka, b.automorphism(perm) - kb, ct.scale))
+    return out
+
+
+def hrot_by_progression(ct: Ciphertext, step: int, count: int,
+                        keys: KeySet) -> list[Ciphertext]:
+    """Minimum key-switching (§V-B): rotations {step, 2·step, …} with ONE evk.
+
+    Returns [rot(ct, j·step) for j in 1..count], computed recursively so only
+    evk_{step} is required (evk traffic ÷ count, at the cost of serial KS).
+    """
+    out = []
+    cur = ct
+    for _ in range(count):
+        cur = hrot(cur, step, keys)
+        out.append(cur)
+    return out
+
+
+# ----------------------------------------------------------------------------
+# Rescaling (paper §II-B / §III-C double-prime variant)
+# ----------------------------------------------------------------------------
+
+def rescale(ct: Ciphertext, params: CkksParams, times: int | None = None) -> Ciphertext:
+    """Divide by the top ``times`` primes (paper default: 2 = double-prime RS)."""
+    times = params.rescale_primes if times is None else times
+    a, b, scale = ct.a, ct.b, ct.scale
+    for _ in range(times):
+        a, b, scale = _rescale_once(a, b, scale)
+    return Ciphertext(a, b, scale)
+
+
+def _rescale_once(a: pl.RnsPoly, b: pl.RnsPoly, scale: float):
+    basis = a.basis
+    ql = basis[-1]
+    new_basis = basis[:-1]
+    qinv = np.array([pow(ql % q, q - 2, q) for q in new_basis], dtype=np.uint32)
+
+    def drop(x: pl.RnsPoly) -> pl.RnsPoly:
+        xn = x.to_ntt()
+        last = pl.RnsPoly(xn.data[..., -1:, :], (ql,), pl.NTT).to_coeff()
+        lifted = bc.centered_lift_single(last.data[..., 0, :], ql, new_basis)
+        lifted_ntt = pl.RnsPoly(lifted, new_basis, pl.COEFF).to_ntt()
+        head = pl.RnsPoly(xn.data[..., :-1, :], new_basis, pl.NTT)
+        return (head - lifted_ntt).mul_scalar(qinv)
+
+    return drop(a), drop(b), scale / ql
+
+
+def level_drop(ct: Ciphertext, ell: int) -> Ciphertext:
+    """Drop to ℓ limbs without division (modulus switching to align levels)."""
+    basis = ct.basis[:ell]
+    return Ciphertext(
+        pl.RnsPoly(ct.a.data[..., :ell, :], basis, ct.a.domain),
+        pl.RnsPoly(ct.b.data[..., :ell, :], basis, ct.b.domain),
+        ct.scale)

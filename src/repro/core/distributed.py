@@ -1,0 +1,309 @@
+"""Distributed FHE primitives under a ClusterMap (paper §IV–§V).
+
+Two complementary renditions of the paper's data-mapping methodology:
+
+1. **Explicit shard_map programs** (this module's ``dist_*`` functions) —
+   deterministic collectives, used for correctness tests and for measuring
+   NoP traffic from compiled HLO:
+
+   * :func:`dist_ntt` — limbs redistributed *within each limb cluster*
+     (all-to-all along ``coef``), local full-row NTT, redistribute back.
+     2 all-to-alls: the baseline layout round-trip.
+   * :func:`dist_ntt_fourstep` — the paper-faithful recomposable dataflow:
+     column phase local → **one** mid-NTT exchange (the "buffering and
+     shuffling step" of §III-B, an all-to-all along ``coef``) → row phase
+     local.  Output lands in the k₁-sharded *NTT layout* (position-wise
+     consistent for all element-wise ops).  Halves NTT traffic vs
+     :func:`dist_ntt`.
+   * :func:`dist_bconv_ark` — ARK's method (§V-A): switch to coefficient
+     scattering (all-to-all along ``limb``), full-table local matmul, switch
+     back (second all-to-all carrying the *larger* output).
+   * :func:`dist_bconv_limbdup` — **limb duplication**: broadcast
+     (all-gather) the input limbs within each coefficient cluster; every core
+     multiplies only its own rows of the BConv table; *no output collective*.
+     Beneficial iff Eq. 3 holds — see :func:`limbdup_beneficial`.
+
+2. **Sharding-constraint policies** for whole HE ops at paper scale
+   (:class:`MappingPolicy` + :func:`mapped_key_switch`): the unchanged global
+   CKKS dataflow with ``with_sharding_constraint`` steering XLA's SPMD
+   partitioner into either BConv strategy — used by the dry-run/roofline
+   measurements.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import bconv as bc
+from . import modmath as mm
+from . import ntt as nttm
+from . import rns
+from .mapping import ClusterMap
+
+POLY_SPEC = P("limb", "coef")
+
+
+def _local_consts(c: nttm.NttConsts):
+    """NttConsts fields as jnp arrays (shard_map operands)."""
+    return tuple(jnp.asarray(f) for f in c)
+
+
+def _consts_from(args) -> nttm.NttConsts:
+    return nttm.NttConsts(*args)
+
+
+# ----------------------------------------------------------------------------
+# Distributed NTT
+# ----------------------------------------------------------------------------
+
+def dist_ntt(mesh, basis: tuple[int, ...], N: int, forward: bool = True):
+    """Baseline distributed NTT: a2a(limbs↔coefs) · local NTT · a2a back."""
+    c = nttm.stacked_ntt_consts(tuple(basis), N)
+
+    def fn(x, *consts):
+        lc = _consts_from(consts)
+        y = lax.all_to_all(x, "coef", split_axis=0, concat_axis=1, tiled=True)
+        y = nttm.ntt(y, lc) if forward else nttm.intt(y, lc)
+        return lax.all_to_all(y, "coef", split_axis=1, concat_axis=0, tiled=True)
+
+    # per-limb tables follow the POST-a2a limb ownership: ℓ split over both axes
+    tab_spec = P(("limb", "coef"), None)
+    specs = (POLY_SPEC,) + (tab_spec,) * 11 + (P(None),)
+    sm = jax.shard_map(fn, mesh=mesh, in_specs=specs, out_specs=POLY_SPEC,
+                       check_vma=False)
+    return sm, _local_consts(c)
+
+
+def run_dist_ntt(mesh, x, basis: tuple[int, ...], forward: bool = True):
+    sm, consts = dist_ntt(mesh, basis, x.shape[-1], forward)
+    return sm(x, *consts)
+
+
+def dist_ntt_fourstep(mesh, basis: tuple[int, ...], N: int, R: int,
+                      forward: bool = True):
+    """Recomposable four-step NTT with ONE mid-transform exchange (§III-B).
+
+    Layouts (cs = cores per limb cluster = ``coef`` axis size):
+      forward  in : (ℓ_loc, N_loc) coefficient-sharded along n₂ (columns)
+      forward  out: (ℓ_loc, N/cs) in the k₁-sharded NTT layout
+    The inverse consumes the NTT layout and returns the coefficient layout.
+    """
+    fc = nttm.stacked_four_step_consts(tuple(basis), N, R)
+    C = fc.C
+
+    def fwd(x, *flat):
+        col = _consts_from(flat[:12])
+        tw, tws, rowp, rowps, q, brev_c = flat[12:]
+        ell_loc = x.shape[0]
+        cs = lax.axis_size("coef")
+        A = x.reshape(ell_loc, R, C // cs)           # full n₁, local n₂ slice
+        A = jnp.moveaxis(A, -1, -3)
+        A = nttm.ntt(A, col)                         # local column phase
+        A = jnp.moveaxis(A, -3, -1)                  # (ℓ_loc, R, C_loc)
+        A = mm.mulmod_shoup(A, tw, tws, q[..., None])
+        # the §III-B shuffle: one all-to-all, R → full C rows
+        A = lax.all_to_all(A, "coef", split_axis=1, concat_axis=2, tiled=True)
+        A = nttm._cyclic_dft(A, rowp, rowps, brev_c, q)   # local row phase
+        return A.reshape(ell_loc, -1)                # k₁-sharded NTT layout
+
+    def inv(x, *flat):
+        col = _consts_from(flat[:12])
+        twi, twis, rowpi, rowpis, cinv, cinvs, q, brev_c = flat[12:]
+        ell_loc = x.shape[0]
+        cs = lax.axis_size("coef")
+        B = x.reshape(ell_loc, R // cs, C)
+        B = nttm._cyclic_dft(B, rowpi, rowpis, brev_c, q)
+        B = mm.mulmod_shoup(B, cinv[..., None], cinvs[..., None], q[..., None])
+        B = lax.all_to_all(B, "coef", split_axis=2, concat_axis=1, tiled=True)
+        B = mm.mulmod_shoup(B, twi, twis, q[..., None])
+        B = jnp.moveaxis(B, -1, -3)
+        B = nttm.intt(B, col)
+        B = jnp.moveaxis(B, -3, -1)                  # (ℓ_loc, R, C_loc)
+        return B.reshape(ell_loc, -1)
+
+    limb = P("limb", None)
+    col_specs = (limb,) * 11 + (P(None),)
+    if forward:
+        extra = [
+            (jnp.asarray(fc.twiddle), P("limb", None, "coef")),
+            (jnp.asarray(fc.twiddle_shoup), P("limb", None, "coef")),
+            (jnp.asarray(fc.row_pow), limb),
+            (jnp.asarray(fc.row_pow_shoup), limb),
+            (jnp.asarray(fc.q), limb),
+            (jnp.asarray(fc.brev_c), P(None)),
+        ]
+        body = fwd
+    else:
+        extra = [
+            (jnp.asarray(fc.twiddle_inv), P("limb", None, "coef")),
+            (jnp.asarray(fc.twiddle_inv_shoup), P("limb", None, "coef")),
+            (jnp.asarray(fc.row_pow_inv), limb),
+            (jnp.asarray(fc.row_pow_inv_shoup), limb),
+            (jnp.asarray(fc.c_inv), limb),
+            (jnp.asarray(fc.c_inv_shoup), limb),
+            (jnp.asarray(fc.q), limb),
+            (jnp.asarray(fc.brev_c), P(None)),
+        ]
+        body = inv
+    specs = (POLY_SPEC,) + col_specs + tuple(s for _, s in extra)
+    sm = jax.shard_map(body, mesh=mesh, in_specs=specs, out_specs=POLY_SPEC,
+                       check_vma=False)
+    consts = _local_consts(fc.col) + tuple(a for a, _ in extra)
+    return sm, consts
+
+
+def run_dist_ntt_fourstep(mesh, x, basis, R, forward=True):
+    sm, consts = dist_ntt_fourstep(mesh, basis, x.shape[-1], R, forward)
+    return sm(x, *consts)
+
+
+def ntt_layout_perm(N: int, R: int) -> np.ndarray:
+    """Global permutation mapping natural-order NTT values to the four-step
+    k₁-sharded layout: layout[l, r·C+c] = â[r + R·c] concatenated over shards."""
+    C = N // R
+    k1, k2 = np.meshgrid(np.arange(R), np.arange(C), indexing="ij")
+    return (k1 + R * k2).reshape(-1).astype(np.int32)   # index into natural â
+
+
+def coef_layout_perm(N: int, R: int, cs: int) -> np.ndarray:
+    """Coefficient-domain layout consumed by :func:`dist_ntt_fourstep`.
+
+    The single-exchange dataflow requires each core of a limb cluster to own a
+    *column slice* (n₂ range) of the R×C view — the paper's lane-interleaved
+    arrangement — rather than a contiguous coefficient range.  Returns I with
+    layout_flat[pos] = a[I[pos]]: device j stores (R, C/cs) row-major for
+    n₂ ∈ [j·C/cs, (j+1)·C/cs).  Position-wise ops (eltwise, BConv columns) are
+    layout-agnostic, so coefficient-domain polys can live permanently in this
+    layout; only encode/decode touch the natural order.
+    """
+    C = N // R
+    Cl = C // cs
+    j, r, c = np.meshgrid(np.arange(cs), np.arange(R), np.arange(Cl),
+                          indexing="ij")
+    return (r * C + j * Cl + c).reshape(-1).astype(np.int32)
+
+
+# ----------------------------------------------------------------------------
+# Distributed BConv: ARK redistribution vs limb duplication (§V-A)
+# ----------------------------------------------------------------------------
+
+def _modmatmul(table, table_shoup, t, qd, mu_hi, mu_lo):
+    """(K', ℓ)·(ℓ, n) mod q_dst — per-term Shoup, lazy 16-bit column sum.
+
+    ``qd``/``mu_*``: (K',) per-destination-prime constants.
+    """
+    terms = mm.mulmod_shoup(t[None, :, :], table[:, :, None],
+                            table_shoup[:, :, None], qd[:, None, None])
+    return bc.lazy_sum_mod(terms, qd[:, None], mu_hi[:, None], mu_lo[:, None],
+                           axis=-2)
+
+
+def _scaled_input(x, src: tuple[int, ...], dst: tuple[int, ...], N: int):
+    tab = rns.bconv_tables(tuple(src), tuple(dst))
+    cs = nttm.stacked_ntt_consts(tuple(src), N)
+    t = mm.mulmod_shoup(x, jnp.asarray(tab.qhat_inv)[:, None],
+                        jnp.asarray(tab.qhat_inv_shoup)[:, None],
+                        jnp.asarray(cs.q))
+    return t, tab
+
+
+def dist_bconv_ark(mesh, x, src: tuple[int, ...], dst: tuple[int, ...]):
+    """ARK §V-A: a2a to coefficient scattering → full-table matmul → a2a back."""
+    N = x.shape[-1]
+    t, tab = _scaled_input(x, src, dst, N)   # q̂⁻¹ scaling is limb-local (sharded)
+    cd = nttm.stacked_ntt_consts(tuple(dst), N)
+
+    def fn(t_loc, table, table_s, qd, mu_hi, mu_lo):
+        t_all = lax.all_to_all(t_loc, "limb", split_axis=1, concat_axis=0,
+                               tiled=True)          # (ℓ, N_c/L_c): coef scatter
+        out = _modmatmul(table, table_s, t_all, qd[:, 0], mu_hi[:, 0], mu_lo[:, 0])
+        return lax.all_to_all(out, "limb", split_axis=0, concat_axis=1,
+                              tiled=True)           # (K/L_c, N_c): back to blocks
+
+    sm = jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(POLY_SPEC, P(None), P(None), P(None), P(None), P(None)),
+        out_specs=POLY_SPEC, check_vma=False)
+    return sm(t, jnp.asarray(tab.table), jnp.asarray(tab.table_shoup),
+              jnp.asarray(cd.q), jnp.asarray(cd.mu_hi), jnp.asarray(cd.mu_lo))
+
+
+def dist_bconv_limbdup(mesh, x, src: tuple[int, ...], dst: tuple[int, ...]):
+    """Limb duplication §V-A: all-gather inputs, local partial-table matmul,
+    NO output redistribution (outputs are born on their owner)."""
+    N = x.shape[-1]
+    K = len(dst)
+    L_c = mesh.shape["limb"]
+    assert K % L_c == 0, "dst primes must split evenly over limb clusters"
+    K_loc = K // L_c
+    t, tab = _scaled_input(x, src, dst, N)
+    cd = nttm.stacked_ntt_consts(tuple(dst), N)
+
+    def fn(t_loc, table, table_s, qd, mu_hi, mu_lo):
+        t_full = lax.all_gather(t_loc, "limb", axis=0, tiled=True)  # broadcast
+        i = lax.axis_index("limb")
+        sl = lambda a: lax.dynamic_slice_in_dim(a, i * K_loc, K_loc, 0)
+        return _modmatmul(sl(table), sl(table_s), t_full,
+                          sl(qd)[:, 0], sl(mu_hi)[:, 0], sl(mu_lo)[:, 0])
+
+    sm = jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(POLY_SPEC, P(None), P(None), P(None), P(None), P(None)),
+        out_specs=POLY_SPEC, check_vma=False)
+    return sm(t, jnp.asarray(tab.table), jnp.asarray(tab.table_shoup),
+              jnp.asarray(cd.q), jnp.asarray(cd.mu_hi), jnp.asarray(cd.mu_lo))
+
+
+def limbdup_beneficial(n_in_limbs: int, n_out_limbs: int, cm: ClusterMap) -> bool:
+    """Paper Eq. 3: #out − #in·(broadcast_overhead − 1) > 0.
+
+    broadcast_overhead = traffic(broadcast to the coefficient cluster) /
+    traffic(even redistribution) = the coefficient-cluster size L_c.
+    """
+    overhead = cm.coef_cluster_size
+    return n_out_limbs - n_in_limbs * (overhead - 1) > 0
+
+
+# ----------------------------------------------------------------------------
+# Mapping policies for whole HE ops (global dataflow + sharding constraints)
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MappingPolicy:
+    """Sharding-constraint policy: how BConv legs are laid out (paper §IV/§V)."""
+    name: str
+    bconv_input: Callable[[jax.sharding.Mesh], P]   # layout fed to the matmul
+    bconv_output: Callable[[jax.sharding.Mesh], P]  # layout of produced limbs
+
+
+ARK_POLICY = MappingPolicy(
+    name="ark-redistribution",
+    bconv_input=lambda mesh: P(None, ("limb", "coef")),   # coef scattering
+    bconv_output=lambda mesh: P("limb", "coef"),          # redistribute back
+)
+
+LIMBDUP_POLICY = MappingPolicy(
+    name="limb-duplication",
+    bconv_input=lambda mesh: P(None, "coef"),   # replicate limbs along "limb"
+    bconv_output=lambda mesh: P("limb", "coef"),  # born distributed: no traffic
+)
+
+
+def mapped_bconv(mesh, policy: MappingPolicy, x, src, dst):
+    """Global-level BConv with the policy's sharding constraints applied."""
+    N = x.shape[-1]
+    t, tab = _scaled_input(x, src, dst, N)
+    cd = nttm.stacked_ntt_consts(tuple(dst), N)
+    t = lax.with_sharding_constraint(t, NamedSharding(mesh, policy.bconv_input(mesh)))
+    out = _modmatmul(jnp.asarray(tab.table), jnp.asarray(tab.table_shoup), t,
+                     jnp.asarray(cd.q)[:, 0], jnp.asarray(cd.mu_hi)[:, 0],
+                     jnp.asarray(cd.mu_lo)[:, 0])
+    return lax.with_sharding_constraint(
+        out, NamedSharding(mesh, policy.bconv_output(mesh)))

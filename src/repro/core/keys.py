@@ -1,0 +1,208 @@
+"""Key material: secret/public keys, hybrid key-switching keys, PRNG evks.
+
+Conventions (paper §II-B): a ciphertext is ct = (a, b) with b = a·s + v + e,
+so decrypt(ct) = b − a·s.  An evaluation key for a target key s′ is a set of
+``dnum`` digit keys over the extended basis Q∪P:
+
+    evk_j = (a_j, b_j),   b_j = a_j·s + e_j + [P·Q̃_j mod (·)]·s′
+
+where Q̃_j = (Q/Q_j)·((Q/Q_j)⁻¹ mod Q_j) is the CRT interpolant of digit j.
+
+**PRNG evk generation** (paper §V-B, adopted from CraterLake): the ``a_j``
+halves are pure uniform randomness, so only a 16-byte seed is stored /
+transferred; ``a_j`` is re-expanded deterministically on first use.  This
+halves evk off-chip traffic; :meth:`EvalKey.bytes_stored` vs
+:meth:`EvalKey.bytes_logical` exposes the saving to the cost model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import poly as pl
+from .params import CkksParams
+
+
+@dataclasses.dataclass
+class SecretKey:
+    s_small: np.ndarray            # (N,) int8 ternary, coeff domain
+
+    @functools.lru_cache(maxsize=None)
+    def ntt_poly(self, basis: tuple[int, ...], N: int) -> pl.RnsPoly:
+        data = pl.small_to_rns(self.s_small.astype(np.int64), basis)
+        return pl.RnsPoly(jnp.asarray(data), basis, pl.COEFF).to_ntt()
+
+    def __hash__(self):            # for the lru_cache above
+        return id(self)
+
+    def __eq__(self, other):
+        return self is other
+
+
+@dataclasses.dataclass
+class EvalKey:
+    """Hybrid key-switching key: one (a, b) pair per digit over Q_L ∪ P."""
+    seed: int                        # PRNG seed for the a-halves
+    b: list[pl.RnsPoly]              # dnum polys, NTT domain, basis Q_L∪P
+    basis: tuple[int, ...]           # Q_L ∪ P
+    _a_cache: list[pl.RnsPoly] | None = None
+
+    def a(self) -> list[pl.RnsPoly]:
+        """Regenerate the a-halves from the seed (PRNG evk, §V-B)."""
+        if self._a_cache is None:
+            rng = np.random.default_rng(self.seed)
+            self._a_cache = [pl.uniform_poly(rng, self.basis, self.b[0].N, pl.NTT)
+                             for _ in self.b]
+        return self._a_cache
+
+    def bytes_logical(self) -> int:
+        n = sum(int(np.prod(p.data.shape)) for p in self.b) * 4
+        return 2 * n                 # a + b halves
+
+    def bytes_stored(self) -> int:
+        return self.bytes_logical() // 2 + 16   # b halves + seed
+
+
+@dataclasses.dataclass
+class KeySet:
+    params: CkksParams
+    sk: SecretKey
+    relin: EvalKey                          # for s²
+    galois: dict[int, EvalKey]              # galois element → key (incl. conj)
+
+    def galois_key(self, g: int) -> EvalKey:
+        if g not in self.galois:
+            raise KeyError(
+                f"no galois key for element {g}; generated: {sorted(self.galois)}")
+        return self.galois[g]
+
+
+def _digit_interp_factors(params: CkksParams) -> list[list[int]]:
+    """F_j mod m for every modulus m in Q_L∪P, F_j = P·(Q/Q_j)·((Q/Q_j)⁻¹ mod Q_j)."""
+    q, p = params.q, params.p
+    P = 1
+    for pi in p:
+        P *= pi
+    digits = params.digit_bases(params.L)
+    out = []
+    for dj in digits:
+        Qj = 1
+        for qi in dj:
+            Qj *= qi
+        Qrest = 1
+        for qi in q:
+            if qi not in dj:
+                Qrest *= qi
+        # Q̃_j = Qrest·(Qrest⁻¹ mod Qj); F_j = P·Q̃_j
+        interp = Qrest * pow(Qrest % Qj, -1, Qj)
+        Fj = P * interp
+        out.append([Fj % m for m in q + p])
+    return out
+
+
+def _make_evk(rng: np.random.Generator, params: CkksParams, sk: SecretKey,
+              target_small: np.ndarray) -> EvalKey:
+    """evk for target key s′ given by its small coefficient vector."""
+    basis = params.q + params.p
+    N = params.N
+    s = sk.ntt_poly(basis, N)
+    sp = pl.RnsPoly(jnp.asarray(pl.small_to_rns(target_small, basis)),
+                    basis, pl.COEFF).to_ntt()
+    factors = _digit_interp_factors(params)
+    seed = int(rng.integers(0, 2 ** 63))
+    a_rng = np.random.default_rng(seed)
+    bs = []
+    for Fj in factors:
+        a = pl.uniform_poly(a_rng, basis, N, pl.NTT)
+        e = pl.gaussian_poly(rng, basis, N).to_ntt()
+        b = (a * s) + e + sp.mul_scalar(np.array(Fj, dtype=np.uint32))
+        bs.append(b)
+    return EvalKey(seed=seed, b=bs, basis=basis)
+
+
+def keygen(params: CkksParams, rotations: tuple[int, ...] = (),
+           conj: bool = False, seed: int = 0,
+           hamming: int | None = None) -> KeySet:
+    """Generate sk, relinearization key, and galois keys for ``rotations``."""
+    rng = np.random.default_rng(seed)
+    N = params.N
+    s_small = pl.ternary_secret(rng, N, hamming=hamming)
+    sk = SecretKey(s_small)
+    # s² via negacyclic self-convolution (exact, host-side)
+    s2 = _negacyclic_small_sq(s_small.astype(np.int64), N)
+    relin = _make_evk(rng, params, sk, s2)
+    galois: dict[int, EvalKey] = {}
+    gelts = {pl.galois_elt(r, N) for r in rotations}
+    if conj:
+        gelts.add(2 * N - 1)
+    for g in sorted(gelts):
+        s_g = _apply_galois_small(s_small.astype(np.int64), N, g)
+        galois[g] = _make_evk(rng, params, sk, s_g)
+    return KeySet(params=params, sk=sk, relin=relin, galois=galois)
+
+
+def add_galois_keys(ks: KeySet, rotations: tuple[int, ...], seed: int = 1) -> None:
+    """Extend a KeySet with additional rotation keys (idempotent)."""
+    rng = np.random.default_rng(seed)
+    N = ks.params.N
+    for r in rotations:
+        g = pl.galois_elt(r, N)
+        if g in ks.galois:
+            continue
+        s_g = _apply_galois_small(ks.sk.s_small.astype(np.int64), N, g)
+        ks.galois[g] = _make_evk(rng, ks.params, ks.sk, s_g)
+
+
+def _negacyclic_small_sq(s: np.ndarray, N: int) -> np.ndarray:
+    full = np.convolve(s, s)
+    out = full[:N].copy()
+    out[: N - 1] -= full[N:]
+    return out
+
+
+def _apply_galois_small(s: np.ndarray, N: int, g: int) -> np.ndarray:
+    dst, flip = pl.automorphism_perm_coeff(N, g)
+    out = np.zeros_like(s)
+    out[dst] = np.where(flip, -s, s)
+    return out
+
+
+# ----------------------------------------------------------------------------
+# Encryption / decryption
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Ciphertext:
+    """(a, b) with b = a·s + m + e; both polys share basis/domain; scale Δ."""
+    a: pl.RnsPoly
+    b: pl.RnsPoly
+    scale: float
+
+    @property
+    def basis(self) -> tuple[int, ...]:
+        return self.a.basis
+
+    @property
+    def level(self) -> int:
+        return len(self.a.basis)
+
+
+def encrypt(pt_residues: np.ndarray, scale: float, sk: SecretKey,
+            basis: tuple[int, ...], N: int,
+            rng: np.random.Generator | None = None) -> Ciphertext:
+    rng = rng or np.random.default_rng(42)
+    a = pl.uniform_poly(rng, basis, N, pl.NTT)
+    e = pl.gaussian_poly(rng, basis, N).to_ntt()
+    m = pl.RnsPoly(jnp.asarray(pt_residues), basis, pl.COEFF).to_ntt()
+    s = sk.ntt_poly(basis, N)
+    b = (a * s) + m + e
+    return Ciphertext(a=a, b=b, scale=scale)
+
+
+def decrypt(ct: Ciphertext, sk: SecretKey) -> np.ndarray:
+    s = sk.ntt_poly(ct.basis, ct.a.N)
+    m = (ct.b.to_ntt() - (ct.a.to_ntt() * s)).to_coeff()
+    return np.asarray(m.data)

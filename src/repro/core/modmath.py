@@ -1,0 +1,138 @@
+"""u32 modular arithmetic for RNS-CKKS — the CiFHER 32-bit datapath (paper §III-C).
+
+Every function here is built from uint32 element-wise ops only (16-bit-limb wide
+multiplication). Rationale:
+
+  * CiFHER chooses a 32-bit word length (§III-C) and pairs it with double-prime
+    rescaling; we keep that choice.
+  * TPUs have no 64-bit integer ALU. The same limb decomposition that an ASIC
+    modular-reduction circuit uses in hardware (word-level Montgomery, [66],[83])
+    is expressed here as u32 ops, so the identical helpers run in plain ``jnp``
+    *and* inside Pallas kernel bodies.
+
+Conventions:
+  * All moduli q satisfy q < 2**30 ("30-bit primes"), giving Shoup/Barrett slack.
+  * Values are kept fully reduced in [0, q) at function boundaries.
+  * Per-constant companions (Shoup precomputations) are generated host-side with
+    Python ints in :mod:`repro.core.rns`.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+_M16 = 0xFFFF  # Python int: weak-typed, safe to close over inside Pallas kernels
+
+
+def mul32_wide(a, b):
+    """Exact 64-bit product of two u32 arrays as a (hi, lo) pair of u32.
+
+    Schoolbook 16-bit-limb multiplication; all intermediates fit in u32.
+    """
+    a = a.astype(U32)
+    b = b.astype(U32)
+    a0 = a & _M16
+    a1 = a >> 16
+    b0 = b & _M16
+    b1 = b >> 16
+    ll = a0 * b0
+    lh = a0 * b1
+    hl = a1 * b0
+    hh = a1 * b1
+    # middle 32-bit column with carries; each term < 2**16 so the sum fits.
+    mid = (ll >> 16) + (lh & _M16) + (hl & _M16)
+    lo = (mid << 16) | (ll & _M16)
+    hi = hh + (lh >> 16) + (hl >> 16) + (mid >> 16)
+    return hi, lo
+
+
+def mulhi32(a, b):
+    """High 32 bits of the 64-bit product."""
+    return mul32_wide(a, b)[0]
+
+
+def mullo32(a, b):
+    """Low 32 bits of the product (native wrapping u32 multiply)."""
+    return a.astype(U32) * b.astype(U32)
+
+
+def addmod(a, b, q):
+    """(a + b) mod q for a, b in [0, q); q < 2**31 so the sum cannot wrap."""
+    s = a + b
+    return jnp.where(s >= q, s - q, s)
+
+
+def submod(a, b, q):
+    """(a - b) mod q for a, b in [0, q)."""
+    d = a - b
+    return jnp.where(a >= b, d, d + q)
+
+
+def negmod(a, q):
+    """(-a) mod q for a in [0, q)."""
+    return jnp.where(a == 0, a, q - a)
+
+
+def mulmod_shoup(x, w, w_shoup, q):
+    """x * w mod q with Shoup precomputation  w_shoup = floor(w * 2**32 / q).
+
+    This is the multiplier CiFHER wires into every butterfly / BConv MAC: for a
+    *known* constant w, the reduction costs one mulhi + two mullo + one
+    conditional subtract.  Requires x in [0, q), w in [0, q), q < 2**31.
+    """
+    x = x.astype(U32)
+    hi = mulhi32(x, w_shoup)
+    r = mullo32(x, w) - mullo32(hi, q)
+    return jnp.where(r >= q, r - q, r)
+
+
+def mont_redc(hi, lo, q, qinv_neg):
+    """Montgomery REDC of the 64-bit value (hi, lo): returns T * 2**-32 mod q.
+
+    qinv_neg = -q**-1 mod 2**32. Output fully reduced in [0, q).
+    """
+    m = mullo32(lo, qinv_neg)
+    h2, l2 = mul32_wide(m, q)
+    # lo + l2 == 0 (mod 2**32); carry is 1 unless lo was exactly 0.
+    carry = (lo != 0).astype(U32)
+    t = hi + h2 + carry  # t < 2q < 2**32: exact.
+    return jnp.where(t >= q, t - q, t)
+
+
+def mont_mul(a, b, q, qinv_neg):
+    """a * b * 2**-32 mod q (one operand typically pre-scaled by 2**32)."""
+    hi, lo = mul32_wide(a, b)
+    return mont_redc(hi, lo, q, qinv_neg)
+
+
+def mulmod(a, b, q, qinv_neg, r2):
+    """General a * b mod q via double REDC;  r2 = 2**64 mod q.
+
+    Used when *neither* operand has a precomputed Shoup companion (rare on the
+    hot path — twiddles, BConv tables and plaintext constants are all constants).
+    """
+    t = mont_mul(a, b, q, qinv_neg)  # a*b*R^-1
+    return mont_mul(t, r2, q, qinv_neg)  # *R^2*R^-1 = a*b
+
+
+def barrett_reduce_wide(hi, lo, q, mu_hi, mu_lo):
+    """Reduce a 64-bit value (hi, lo) mod q, q < 2**30.
+
+    mu = floor(2**62 / q) is a ~33-bit constant split as (mu_hi, mu_lo) with
+    mu = mu_hi * 2**32 + mu_lo and mu_hi in {0,1,2,3}.  Estimate
+    t = floor(x / 2**30), quo ~= (t * mu) >> 32, then r = x - quo * q needs at
+    most two correction subtracts.  Valid for x < 2**60 (enforced by callers:
+    lazy accumulations bound their sums below 2**60).
+    """
+    # t = floor(x / 2**30)  (x < 2**60 so t < 2**30)
+    t = (hi << 2) | (lo >> 30)
+    # quo = floor(t * mu / 2**32) = t*mu_hi + mulhi(t, mu_lo)
+    quo = mullo32(t, mu_hi) + mulhi32(t, mu_lo)
+    # r = x - quo*q computed in (hi,lo) pairs; result fits u32 (< 4q).
+    qh, ql = mul32_wide(quo, q)
+    del qh  # difference fits in u32 by construction
+    r = lo - ql
+    r = jnp.where(r >= q, r - q, r)
+    r = jnp.where(r >= q, r - q, r)
+    r = jnp.where(r >= q, r - q, r)
+    return r

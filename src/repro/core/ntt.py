@@ -1,0 +1,263 @@
+"""Negacyclic NTT — iterative reference + the recomposable four-step NTT (paper §III-B).
+
+Two implementations of the same transform:
+
+* :func:`ntt` / :func:`intt` — fused iterative Cooley-Tukey / Gentleman-Sande
+  (Longa-Naehrig) with Shoup multipliers.  This is the *oracle* and the fast
+  pure-``jnp`` path used by the CKKS layer on CPU.
+
+* :func:`four_step_ntt` / :func:`four_step_intt` — the paper's recomposable
+  dataflow: a length-N polynomial viewed as an R×C matrix; an R-point
+  *negacyclic* column NTT (root ψ^C), the inter-step twiddle ψ^{(2k₁+1)n₂},
+  and a C-point *cyclic* row DFT (root ω=ψ^{2R}).  ``R`` is the recomposition
+  parameter — CiFHER's "number of submodules" knob.  Every power-of-two split
+  must produce identical results (validated in tests); the Pallas kernel in
+  ``repro.kernels.ntt`` executes this dataflow tile-by-tile in VMEM.
+
+All transforms use NATURAL-order inputs and outputs:
+    ntt(a)[k] = Σₙ a[n]·ψ^{(2k+1)n} mod q  —  evaluation at the odd root ψ^{2k+1}.
+Natural ordering keeps automorphism a clean index permutation (§II-C).
+
+Shapes: ``x`` is ``(..., ℓ, N)`` u32 with one modulus per limb row; the limb
+tables are stacked ``(ℓ, N)`` arrays built by :func:`stacked_ntt_consts`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import modmath as mm
+from . import rns
+
+
+class NttConsts(NamedTuple):
+    """Stacked per-limb NTT constants for a prime basis (pytree of arrays)."""
+    q: np.ndarray                  # (ℓ, 1) u32
+    psi_rev: np.ndarray            # (ℓ, N) u32 — fused CT forward table
+    psi_rev_shoup: np.ndarray      # (ℓ, N)
+    psi_inv_rev: np.ndarray        # (ℓ, N) — fused GS inverse table
+    psi_inv_rev_shoup: np.ndarray  # (ℓ, N)
+    n_inv: np.ndarray              # (ℓ, 1)
+    n_inv_shoup: np.ndarray        # (ℓ, 1)
+    qinv_neg: np.ndarray           # (ℓ, 1) — Montgomery -q⁻¹ mod 2³²
+    r2: np.ndarray                 # (ℓ, 1) — 2⁶⁴ mod q
+    mu_hi: np.ndarray              # (ℓ, 1) — Barrett floor(2⁶²/q) split
+    mu_lo: np.ndarray              # (ℓ, 1)
+    brev: np.ndarray               # (N,) i32 — bit-reversal permutation
+
+
+@functools.lru_cache(maxsize=None)
+def stacked_ntt_consts(basis: tuple[int, ...], N: int) -> NttConsts:
+    tabs = [rns.prime_tables(q, N) for q in basis]
+    stack = lambda f: np.stack([f(t) for t in tabs])
+    col = lambda f: np.array([[f(t)] for t in tabs], dtype=np.uint32)
+    return NttConsts(
+        q=col(lambda t: t.q),
+        psi_rev=stack(lambda t: t.psi_rev),
+        psi_rev_shoup=stack(lambda t: t.psi_rev_shoup),
+        psi_inv_rev=stack(lambda t: t.psi_inv_rev),
+        psi_inv_rev_shoup=stack(lambda t: t.psi_inv_rev_shoup),
+        n_inv=col(lambda t: t.n_inv),
+        n_inv_shoup=col(lambda t: t.n_inv_shoup),
+        qinv_neg=col(lambda t: t.qinv_neg),
+        r2=col(lambda t: t.r2),
+        mu_hi=col(lambda t: t.mu_hi),
+        mu_lo=col(lambda t: t.mu_lo),
+        brev=rns.bitrev_indices(N).astype(np.int32),
+    )
+
+
+# ----------------------------------------------------------------------------
+# Iterative fused CT / GS (the oracle and the CPU-fast path)
+# ----------------------------------------------------------------------------
+
+def ntt(x, c: NttConsts):
+    """Forward negacyclic NTT over the last axis; natural-order in/out."""
+    N = x.shape[-1]
+    q = c.q[..., None]  # (ℓ, 1, 1) broadcasting against (..., ℓ, m, t)
+    lead = x.shape[:-1]
+    m, t = 1, N
+    while m < N:
+        t //= 2
+        y = x.reshape(*lead, m, 2, t)
+        a, b = y[..., 0, :], y[..., 1, :]
+        w = jnp.asarray(c.psi_rev[:, m:2 * m])[:, :, None]
+        ws = jnp.asarray(c.psi_rev_shoup[:, m:2 * m])[:, :, None]
+        bw = mm.mulmod_shoup(b, w, ws, q)
+        x = jnp.stack([mm.addmod(a, bw, q), mm.submod(a, bw, q)], axis=-2)
+        x = x.reshape(*lead, N)
+        m *= 2
+    return jnp.take(x, jnp.asarray(c.brev), axis=-1)  # bit-reversed → natural
+
+
+def intt(x, c: NttConsts):
+    """Inverse negacyclic NTT over the last axis; natural-order in/out."""
+    N = x.shape[-1]
+    q = c.q[..., None]
+    lead = x.shape[:-1]
+    x = jnp.take(x, jnp.asarray(c.brev), axis=-1)  # natural → bit-reversed
+    t, m = 1, N
+    while m > 1:
+        h = m // 2
+        y = x.reshape(*lead, h, 2, t)
+        a, b = y[..., 0, :], y[..., 1, :]
+        w = jnp.asarray(c.psi_inv_rev[:, h:2 * h])[:, :, None]
+        ws = jnp.asarray(c.psi_inv_rev_shoup[:, h:2 * h])[:, :, None]
+        u = mm.addmod(a, b, q)
+        v = mm.mulmod_shoup(mm.submod(a, b, q), w, ws, q)
+        x = jnp.stack([u, v], axis=-2).reshape(*lead, N)
+        t *= 2
+        m = h
+    return mm.mulmod_shoup(x, c.n_inv, c.n_inv_shoup, c.q)
+
+
+# ----------------------------------------------------------------------------
+# Four-step recomposable NTT (paper §III-B dataflow)
+# ----------------------------------------------------------------------------
+
+class FourStepConsts(NamedTuple):
+    """Stacked per-limb constants for the R×C four-step decomposition."""
+    R: int
+    C: int
+    q: np.ndarray                # (ℓ, 1) u32
+    col: NttConsts               # stacked negacyclic tables, length R, root ψ^C
+    twiddle: np.ndarray          # (ℓ, R, C) — ψ^{(2k₁+1)n₂}, k₁ natural
+    twiddle_shoup: np.ndarray
+    twiddle_inv: np.ndarray
+    twiddle_inv_shoup: np.ndarray
+    row_pow: np.ndarray          # (ℓ, C/2) — ω^i, ω = ψ^{2R}
+    row_pow_shoup: np.ndarray
+    row_pow_inv: np.ndarray
+    row_pow_inv_shoup: np.ndarray
+    c_inv: np.ndarray            # (ℓ, 1)
+    c_inv_shoup: np.ndarray
+    brev_c: np.ndarray           # (C,) i32
+
+
+@functools.lru_cache(maxsize=None)
+def stacked_four_step_consts(basis: tuple[int, ...], N: int, R: int) -> FourStepConsts:
+    tabs = [rns.four_step_tables(q, N, R) for q in basis]
+    C = N // R
+    stack = lambda f: np.stack([f(t) for t in tabs])
+    colv = lambda f: np.array([[f(t)] for t in tabs], dtype=np.uint32)
+    col_consts = NttConsts(
+        q=colv(lambda t: t.col.q),
+        psi_rev=stack(lambda t: t.col.psi_rev),
+        psi_rev_shoup=stack(lambda t: t.col.psi_rev_shoup),
+        psi_inv_rev=stack(lambda t: t.col.psi_inv_rev),
+        psi_inv_rev_shoup=stack(lambda t: t.col.psi_inv_rev_shoup),
+        n_inv=colv(lambda t: t.col.n_inv),
+        n_inv_shoup=colv(lambda t: t.col.n_inv_shoup),
+        qinv_neg=colv(lambda t: t.col.qinv_neg),
+        r2=colv(lambda t: t.col.r2),
+        mu_hi=colv(lambda t: t.col.mu_hi),
+        mu_lo=colv(lambda t: t.col.mu_lo),
+        brev=rns.bitrev_indices(R).astype(np.int32),
+    )
+    return FourStepConsts(
+        R=R, C=C,
+        q=colv(lambda t: t.col.q),
+        col=col_consts,
+        twiddle=stack(lambda t: t.twiddle),
+        twiddle_shoup=stack(lambda t: t.twiddle_shoup),
+        twiddle_inv=stack(lambda t: t.twiddle_inv),
+        twiddle_inv_shoup=stack(lambda t: t.twiddle_inv_shoup),
+        row_pow=stack(lambda t: t.row_pow),
+        row_pow_shoup=stack(lambda t: t.row_pow_shoup),
+        row_pow_inv=stack(lambda t: t.row_pow_inv),
+        row_pow_inv_shoup=stack(lambda t: t.row_pow_inv_shoup),
+        c_inv=colv(lambda t: t.c_inv),
+        c_inv_shoup=colv(lambda t: t.c_inv_shoup),
+        brev_c=rns.bitrev_indices(C).astype(np.int32),
+    )
+
+
+def _cyclic_dft(x, pow_tab, pow_tab_shoup, brev_c, q):
+    """Length-C cyclic DIT NTT over the last axis, natural-order in/out.
+
+    ``pow_tab``: (ℓ, C/2) powers ω^i (or ω^{-i} for the inverse direction);
+    stage-m twiddles are the stride-C/(2m) subsampling of this table.
+    ``x``: (..., ℓ, rows, C).  q: (ℓ, 1) broadcast to (ℓ, 1, 1).
+    """
+    C = x.shape[-1]
+    lead = x.shape[:-1]
+    qb = q[..., None]
+    x = jnp.take(x, jnp.asarray(brev_c), axis=-1)
+    m = 1
+    while m < C:
+        y = x.reshape(*lead[:-1], lead[-1] * (C // (2 * m)), 2, m)
+        a, b = y[..., 0, :], y[..., 1, :]
+        stride = C // (2 * m)
+        w = jnp.asarray(pow_tab[:, ::stride][:, :m])[:, None, :]       # (ℓ,1,m)
+        ws = jnp.asarray(pow_tab_shoup[:, ::stride][:, :m])[:, None, :]
+        # a/b have shape (..., ℓ, rows·C/(2m), m); w broadcasts over rows.
+        bw = mm.mulmod_shoup(b, w, ws, qb)
+        x = jnp.stack([mm.addmod(a, bw, qb), mm.submod(a, bw, qb)], axis=-2)
+        x = x.reshape(*lead, C)
+        m *= 2
+    return x
+
+
+def four_step_ntt(x, fc: FourStepConsts):
+    """Forward negacyclic NTT via the paper's R×C four-step dataflow.
+
+    Input/output natural order, identical to :func:`ntt` for every valid R.
+    Data is viewed as A[n₁, n₂] = a[C·n₁ + n₂]; the output is re-flattened so
+    that â[k₁ + R·k₂] = B[k₁, k₂].
+    """
+    R, C = fc.R, fc.C
+    lead = x.shape[:-1]
+    A = x.reshape(*lead, R, C)
+    # 1) R-point negacyclic NTT along columns (axis -2), root ψ^C.
+    #    Move n₂ before the limb axis so the (ℓ, R) tables broadcast.
+    A = jnp.moveaxis(A, -1, -3)                  # (..., C, ℓ, R)
+    A = ntt(A, fc.col)
+    A = jnp.moveaxis(A, -3, -1)                  # (..., ℓ, R, C), k₁ natural
+    # 2) inter-step twiddle ψ^{(2k₁+1)·n₂}
+    A = mm.mulmod_shoup(A, jnp.asarray(fc.twiddle), jnp.asarray(fc.twiddle_shoup),
+                        fc.q[..., None])
+    # 3) C-point cyclic DFT along rows (axis -1), root ω = ψ^{2R}.
+    A = _cyclic_dft(A, fc.row_pow, fc.row_pow_shoup, fc.brev_c, fc.q)
+    # 4) transpose so that flattening yields â[k₁ + R·k₂].
+    return jnp.swapaxes(A, -1, -2).reshape(*lead, R * C)
+
+
+def four_step_intt(x, fc: FourStepConsts):
+    """Inverse of :func:`four_step_ntt`; natural order in/out."""
+    R, C = fc.R, fc.C
+    lead = x.shape[:-1]
+    B = x.reshape(*lead, C, R)
+    B = jnp.swapaxes(B, -1, -2)                  # (..., ℓ, R, C), [k₁, k₂]
+    # inverse row DFT (ω^{-1}), then scale by C⁻¹
+    B = _cyclic_dft(B, fc.row_pow_inv, fc.row_pow_inv_shoup, fc.brev_c, fc.q)
+    B = mm.mulmod_shoup(B, fc.c_inv[..., None], fc.c_inv_shoup[..., None],
+                        fc.q[..., None])
+    # inverse twiddle
+    B = mm.mulmod_shoup(B, jnp.asarray(fc.twiddle_inv), jnp.asarray(fc.twiddle_inv_shoup),
+                        fc.q[..., None])
+    # inverse column negacyclic NTT (includes R⁻¹ scaling)
+    B = jnp.moveaxis(B, -1, -3)                  # (..., C, ℓ, R)
+    B = intt(B, fc.col)
+    B = jnp.moveaxis(B, -3, -1)                  # (..., ℓ, R, C) = A[n₁, n₂]
+    return B.reshape(*lead, R * C)
+
+
+# ----------------------------------------------------------------------------
+# O(N²) naive oracle (host-side, Python ints) — ground truth for tests
+# ----------------------------------------------------------------------------
+
+def naive_ntt(a: np.ndarray, q: int, N: int) -> np.ndarray:
+    """â[k] = Σₙ a[n]·ψ^{(2k+1)n} mod q via exact big-int arithmetic."""
+    psi = rns.find_psi(q, N)
+    out = np.zeros(N, dtype=np.uint32)
+    for k in range(N):
+        root = pow(psi, 2 * k + 1, q)
+        acc, w = 0, 1
+        for n in range(N):
+            acc = (acc + int(a[n]) * w) % q
+            w = w * root % q
+        out[k] = acc
+    return out

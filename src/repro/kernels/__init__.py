@@ -1,0 +1,25 @@
+"""Pallas TPU kernels for the FHE hot spots (paper §III).
+
+Four kernels mirror CiFHER's functional units, re-tiled for the TPU memory
+hierarchy (HBM → VMEM → VREG) instead of an ASIC's RF/lane fabric:
+
+====================  ===========================  =============================
+CiFHER FU             kernel                       tiling
+====================  ===========================  =============================
+recomposable NTTU     ``kernels.ntt``              one limb per program in VMEM;
+                                                   R×C four-step dataflow, R =
+                                                   "submodules" resize knob
+systolic BConvU       ``kernels.bconv``            output-stationary MAC over
+                                                   (dst-prime × coeff-tile)
+                                                   blocks, lazy 16-bit column
+                                                   accumulation, one Barrett
+EFU                   ``kernels.eltwise``          fused compound element-wise
+                                                   modular ops (u32 Montgomery)
+AutoU                 ``kernels.automorphism``     φ_g index permutation
+====================  ===========================  =============================
+
+Each subpackage has ``kernel.py`` (pallas_call + BlockSpec), ``ops.py``
+(jit wrapper; ``interpret=True`` on CPU), ``ref.py`` (independent numpy-int64
+oracle).  Tests sweep shapes × bases and assert exact equality — modular
+arithmetic is exact, so no tolerance is needed.
+"""

@@ -1,0 +1,35 @@
+"""AutoU: automorphism φ_g as an NTT-domain index permutation kernel.
+
+CiFHER's AutoU is a permutation network over the lanes; on TPU the permutation
+is a VMEM gather with a precomputed index vector (natural-order NTT domain
+keeps φ_g sign-free — see ``repro.core.poly.automorphism_perm``).
+Grid = (poly, limb); the whole limb sits in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _body(x_ref, perm_ref, o_ref):
+    o_ref[0, 0] = jnp.take(x_ref[0, 0], perm_ref[...], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def automorphism_pallas(x, perm, *, interpret: bool = True):
+    """x: (P, ℓ, N) u32, perm: (N,) i32 → out[p, i, k] = x[p, i, perm[k]]."""
+    P, ell, N = x.shape
+    return pl.pallas_call(
+        _body,
+        grid=(P, ell),
+        in_specs=[
+            pl.BlockSpec((1, 1, N), lambda p, i: (p, i, 0)),
+            pl.BlockSpec((N,), lambda p, i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, N), lambda p, i: (p, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((P, ell, N), jnp.uint32),
+        interpret=interpret,
+    )(x, perm)

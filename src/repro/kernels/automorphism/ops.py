@@ -1,0 +1,17 @@
+"""Public wrapper: rotate/conjugate an NTT-domain poly by galois element."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import poly as pl_core
+
+from .kernel import automorphism_pallas
+
+
+def apply_galois(x, N: int, g: int, interpret: bool = True):
+    perm = pl_core.automorphism_perm(N, g)
+    return automorphism_pallas(x, jnp.asarray(perm), interpret=interpret)
+
+
+def apply_rotation(x, N: int, r: int, interpret: bool = True):
+    return apply_galois(x, N, pl_core.galois_elt(r, N), interpret=interpret)

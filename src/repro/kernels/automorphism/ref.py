@@ -1,0 +1,8 @@
+"""numpy oracle for the automorphism kernel."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def automorphism_ref(x: np.ndarray, perm: np.ndarray) -> np.ndarray:
+    return x[..., perm]

@@ -1,0 +1,25 @@
+"""Public BConv op: limb-wise q̂⁻¹ scaling + the Pallas table-matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import modmath as mm
+from repro.core import ntt as nttm
+from repro.core import rns
+
+
+def bconv(x, src: tuple[int, ...], dst: tuple[int, ...],
+          tile: int = 2048, interpret: bool = True):
+    """(ℓ, N) coeff-domain residues in ``src`` → (K, N) in ``dst`` (HPS)."""
+    from .kernel import bconv_matmul_pallas
+    src, dst = tuple(src), tuple(dst)
+    tab = rns.bconv_tables(src, dst)
+    cs = nttm.stacked_ntt_consts(src, x.shape[-1])
+    cd = nttm.stacked_ntt_consts(dst, x.shape[-1])
+    t = mm.mulmod_shoup(x, jnp.asarray(tab.qhat_inv)[:, None],
+                        jnp.asarray(tab.qhat_inv_shoup)[:, None], cs.q)
+    return bconv_matmul_pallas(
+        t, jnp.asarray(tab.table), jnp.asarray(tab.table_shoup),
+        jnp.asarray(cd.q), jnp.asarray(cd.mu_hi), jnp.asarray(cd.mu_lo),
+        tile=min(tile, x.shape[-1]), interpret=interpret)

@@ -1,0 +1,66 @@
+"""Fused element-wise EFU kernel (paper §III-C "compound element-wise ops").
+
+One grid step = one (limb, coefficient-tile) block in VMEM.  The EFU op menu
+mirrors CiFHER's: modular mul, add, sub, and the two compound forms that cut
+RF (here: HBM↔VMEM) round-trips on the HMult hot path:
+
+    mul      : a ⊙ b
+    add/sub  : a ± b
+    mac      : a ⊙ b + c ⊙ d            (HMult's d₁ = a₁b₂ + a₂b₁, one pass)
+    muladd   : a ⊙ b + c
+
+General products use double-REDC Montgomery (no precomputed companions).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import modmath as mm
+
+OPS = ("mul", "add", "sub", "mac", "muladd")
+
+
+def _body(op, n_in, q_ref, qinv_ref, r2_ref, *refs):
+    o_ref = refs[-1]
+    ins = refs[:-1]
+    q, qinv, r2 = q_ref[0, 0], qinv_ref[0, 0], r2_ref[0, 0]
+    if op == "mul":
+        o_ref[0] = mm.mulmod(ins[0][0], ins[1][0], q, qinv, r2)
+    elif op == "add":
+        o_ref[0] = mm.addmod(ins[0][0], ins[1][0], q)
+    elif op == "sub":
+        o_ref[0] = mm.submod(ins[0][0], ins[1][0], q)
+    elif op == "mac":
+        t1 = mm.mulmod(ins[0][0], ins[1][0], q, qinv, r2)
+        t2 = mm.mulmod(ins[2][0], ins[3][0], q, qinv, r2)
+        o_ref[0] = mm.addmod(t1, t2, q)
+    elif op == "muladd":
+        t = mm.mulmod(ins[0][0], ins[1][0], q, qinv, r2)
+        o_ref[0] = mm.addmod(t, ins[2][0], q)
+    else:  # pragma: no cover
+        raise ValueError(op)
+
+
+@functools.partial(jax.jit, static_argnames=("op", "tile", "interpret"))
+def eltwise_pallas(op: str, q, qinv_neg, r2, *arrays,
+                   tile: int = 4096, interpret: bool = True):
+    """arrays: n× (ℓ, N) u32 operands; per-limb consts (ℓ, 1)."""
+    assert op in OPS
+    ell, N = arrays[0].shape
+    tile = min(tile, N)
+    assert N % tile == 0
+    n_in = len(arrays)
+    const_spec = pl.BlockSpec((1, 1), lambda i, c: (i, 0))
+    arr_spec = pl.BlockSpec((1, tile), lambda i, c: (i, c))
+    return pl.pallas_call(
+        functools.partial(_body, op, n_in),
+        grid=(ell, N // tile),
+        in_specs=[const_spec] * 3 + [arr_spec] * n_in,
+        out_specs=arr_spec,
+        out_shape=jax.ShapeDtypeStruct((ell, N), jnp.uint32),
+        interpret=interpret,
+    )(q, qinv_neg, r2, *arrays)

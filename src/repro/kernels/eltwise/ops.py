@@ -1,0 +1,14 @@
+"""Public wrappers for the EFU kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import ntt as nttm
+
+from .kernel import eltwise_pallas
+
+
+def eltwise(op: str, basis: tuple[int, ...], *arrays, interpret: bool = True):
+    c = nttm.stacked_ntt_consts(tuple(basis), arrays[0].shape[-1])
+    return eltwise_pallas(op, jnp.asarray(c.q), jnp.asarray(c.qinv_neg),
+                          jnp.asarray(c.r2), *arrays, interpret=interpret)

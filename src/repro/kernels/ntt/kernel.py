@@ -1,0 +1,183 @@
+"""Four-step recomposable NTT as a Pallas kernel (paper §III-B → TPU).
+
+Dataflow per grid step = one (poly, limb) pair resident in VMEM:
+
+    HBM ──(BlockSpec (1,1,N))──> VMEM tile x
+    x.reshape(R, C)
+    column phase : R-point negacyclic NTT (root ψ^C)   — fused CT butterflies
+    twiddle      : ⊙ ψ^{(2k₁+1)·n₂}                     — Shoup mulmod
+    row phase    : C-point cyclic DFT (root ψ^{2R})     — fused CT butterflies
+    transpose    : B[k₁,k₂] → â[k₁+R·k₂]
+    VMEM ──> HBM
+
+``R`` is the recomposition knob: CiFHER's "number of NTTU submodules"
+becomes the row extent of the VMEM tile; every power-of-two R produces
+identical results (tests sweep it).  Butterfly stages are statically unrolled
+reshape/stack ops — VREG-friendly; the two bit-reversal index lookups use
+in-VMEM gathers (interpret-exact; on real TPU they would be absorbed into
+pre-permuted twiddle tables — see EXPERIMENTS.md §Perf for that iteration).
+
+The kernel body calls the *same* ``repro.core.modmath`` u32 primitives as the
+pure-jnp path, so kernel-vs-oracle equality is a true end-to-end check of the
+BlockSpec plumbing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import modmath as mm
+from repro.core import ntt as nttm
+
+
+def _col_ntt(x, psi_rev, psi_rev_shoup, q, brev):
+    """Fused CT negacyclic NTT along the last axis of (rows, R) values."""
+    R = x.shape[-1]
+    m, t = 1, R
+    while m < R:
+        t //= 2
+        y = x.reshape(-1, m, 2, t)
+        a, b = y[:, :, 0, :], y[:, :, 1, :]
+        w = psi_rev[m:2 * m][None, :, None]
+        ws = psi_rev_shoup[m:2 * m][None, :, None]
+        bw = mm.mulmod_shoup(b, w, ws, q)
+        x = jnp.stack([mm.addmod(a, bw, q), mm.submod(a, bw, q)], axis=2)
+        x = x.reshape(-1, R)
+        m *= 2
+    return jnp.take(x, brev, axis=-1)
+
+
+def _col_intt(x, psi_inv_rev, psi_inv_rev_shoup, n_inv, n_inv_shoup, q, brev):
+    R = x.shape[-1]
+    x = jnp.take(x, brev, axis=-1)
+    t, m = 1, R
+    while m > 1:
+        h = m // 2
+        y = x.reshape(-1, h, 2, t)
+        a, b = y[:, :, 0, :], y[:, :, 1, :]
+        w = psi_inv_rev[h:2 * h][None, :, None]
+        ws = psi_inv_rev_shoup[h:2 * h][None, :, None]
+        u = mm.addmod(a, b, q)
+        v = mm.mulmod_shoup(mm.submod(a, b, q), w, ws, q)
+        x = jnp.stack([u, v], axis=2).reshape(-1, R)
+        t *= 2
+        m = h
+    return mm.mulmod_shoup(x, n_inv, n_inv_shoup, q)
+
+
+def _row_dft(x, pow_tab, pow_tab_shoup, brev_c, q):
+    """Cyclic DIT NTT along the last axis of (rows, C) values."""
+    C = x.shape[-1]
+    x = jnp.take(x, brev_c, axis=-1)
+    m = 1
+    while m < C:
+        y = x.reshape(-1, 2, m)
+        a, b = y[:, 0, :], y[:, 1, :]
+        stride = C // (2 * m)
+        w = pow_tab[::stride][:m][None, :]
+        ws = pow_tab_shoup[::stride][:m][None, :]
+        bw = mm.mulmod_shoup(b, w, ws, q)
+        x = jnp.stack([mm.addmod(a, bw, q), mm.submod(a, bw, q)],
+                      axis=1).reshape(-1, C)
+        m *= 2
+    return x
+
+
+def _fwd_body(R, C,
+              x_ref, colpsi_ref, colpsis_ref, tw_ref, tws_ref,
+              rowp_ref, rowps_ref, q_ref, brev_r_ref, brev_c_ref, o_ref):
+    q = q_ref[0, 0]
+    A = x_ref[0, 0].reshape(R, C)
+    # column phase (along axis 0): operate on the transpose so the fused-CT
+    # helper sees contiguous last-axis vectors.
+    At = A.T                                             # (C, R)
+    At = _col_ntt(At, colpsi_ref[0], colpsis_ref[0], q, brev_r_ref[...])
+    A = At.T                                             # (R, C), k₁ natural
+    A = mm.mulmod_shoup(A, tw_ref[0], tws_ref[0], q)     # inter-step twiddle
+    A = _row_dft(A, rowp_ref[0], rowps_ref[0], brev_c_ref[...], q)
+    o_ref[0, 0] = A.T.reshape(R * C)                     # â[k₁ + R·k₂]
+
+
+def _inv_body(R, C,
+              x_ref, colpsii_ref, colpsiis_ref, twi_ref, twis_ref,
+              rowpi_ref, rowpis_ref, rinv_ref, rinvs_ref, cinv_ref, cinvs_ref,
+              q_ref, brev_r_ref, brev_c_ref, o_ref):
+    q = q_ref[0, 0]
+    B = x_ref[0, 0].reshape(C, R).T                      # (R, C) = B[k₁, k₂]
+    B = _row_dft(B, rowpi_ref[0], rowpis_ref[0], brev_c_ref[...], q)
+    B = mm.mulmod_shoup(B, cinv_ref[0, 0], cinvs_ref[0, 0], q)
+    B = mm.mulmod_shoup(B, twi_ref[0], twis_ref[0], q)
+    Bt = B.T                                             # (C, R)
+    Bt = _col_intt(Bt, colpsii_ref[0], colpsiis_ref[0],
+                   rinv_ref[0, 0], rinvs_ref[0, 0], q, brev_r_ref[...])
+    o_ref[0, 0] = Bt.T.reshape(R * C)                    # A[n₁, n₂] flattened
+
+
+def _limb_spec(shape_tail):
+    """BlockSpec selecting one limb of a per-limb table: (1, *tail)."""
+    nd = len(shape_tail)
+    return pl.BlockSpec((1,) + shape_tail, lambda p, i: (i,) + (0,) * nd)
+
+
+@functools.partial(jax.jit, static_argnames=("R", "basis", "forward", "interpret"))
+def ntt_pallas(x, *, R: int, basis: tuple[int, ...], forward: bool = True,
+               interpret: bool = True):
+    """(P, ℓ, N) u32 → same shape; grid = (poly, limb), one limb per program."""
+    P, ell, N = x.shape
+    C = N // R
+    fc = nttm.stacked_four_step_consts(basis, N, R)
+    grid = (P, ell)
+    x_spec = pl.BlockSpec((1, 1, N), lambda p, i: (p, i, 0))
+    out_shape = jax.ShapeDtypeStruct(x.shape, jnp.uint32)
+    if forward:
+        body = functools.partial(_fwd_body, R, C)
+        operands = (
+            x,
+            fc.col.psi_rev, fc.col.psi_rev_shoup,
+            fc.twiddle, fc.twiddle_shoup,
+            fc.row_pow, fc.row_pow_shoup,
+            fc.q,
+        )
+        specs = [
+            x_spec,
+            _limb_spec((R,)), _limb_spec((R,)),
+            _limb_spec((R, C)), _limb_spec((R, C)),
+            _limb_spec((C // 2,)), _limb_spec((C // 2,)),
+            _limb_spec((1,)),
+        ]
+    else:
+        body = functools.partial(_inv_body, R, C)
+        operands = (
+            x,
+            fc.col.psi_inv_rev, fc.col.psi_inv_rev_shoup,
+            fc.twiddle_inv, fc.twiddle_inv_shoup,
+            fc.row_pow_inv, fc.row_pow_inv_shoup,
+            fc.col.n_inv, fc.col.n_inv_shoup,
+            fc.c_inv, fc.c_inv_shoup,
+            fc.q,
+        )
+        specs = [
+            x_spec,
+            _limb_spec((R,)), _limb_spec((R,)),
+            _limb_spec((R, C)), _limb_spec((R, C)),
+            _limb_spec((C // 2,)), _limb_spec((C // 2,)),
+            _limb_spec((1,)), _limb_spec((1,)),
+            _limb_spec((1,)), _limb_spec((1,)),
+            _limb_spec((1,)),
+        ]
+    # bit-reversal index vectors are shared across the grid (replicated blocks)
+    brev_r = fc.col.brev
+    brev_c = fc.brev_c
+    specs += [pl.BlockSpec((R,), lambda p, i: (0,)),
+              pl.BlockSpec((C,), lambda p, i: (0,))]
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=specs,
+        out_specs=pl.BlockSpec((1, 1, N), lambda p, i: (p, i, 0)),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*operands, brev_r, brev_c)

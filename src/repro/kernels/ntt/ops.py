@@ -1,0 +1,38 @@
+"""jit'd public wrappers for the four-step NTT Pallas kernel."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import ntt_pallas
+
+
+def default_submodules(N: int) -> int:
+    """CiFHER's default submodule count: R = ⁴√N·… → use R = √N (balanced)."""
+    R = 1
+    while R * R < N:
+        R *= 2
+    return R
+
+
+def ntt_fwd(x, basis: tuple[int, ...], R: int | None = None,
+            interpret: bool = True):
+    """Forward negacyclic NTT of (P, ℓ, N) u32 via the Pallas kernel."""
+    R = R or default_submodules(x.shape[-1])
+    return ntt_pallas(x, R=R, basis=tuple(basis), forward=True,
+                      interpret=interpret)
+
+
+def ntt_inv(x, basis: tuple[int, ...], R: int | None = None,
+            interpret: bool = True):
+    R = R or default_submodules(x.shape[-1])
+    return ntt_pallas(x, R=R, basis=tuple(basis), forward=False,
+                      interpret=interpret)
+
+
+def lower_tpu(x_shape, basis: tuple[int, ...], R: int, forward: bool = True):
+    """Lower (no execute) the kernel for inspection/benchmarks."""
+    import jax.numpy as jnp
+    spec = jax.ShapeDtypeStruct(x_shape, jnp.uint32)
+    fn = lambda x: ntt_pallas(x, R=R, basis=tuple(basis), forward=forward,
+                              interpret=True)
+    return jax.jit(fn).lower(spec)

@@ -1,0 +1,1 @@
+"""Launch layer: production meshes, the multi-pod dry-run, train/serve CLIs."""

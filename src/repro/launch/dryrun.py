@@ -1,0 +1,246 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input shape × mesh) cell on the production meshes and record
+memory / cost / collective analyses — the proof that the distribution config
+is coherent without real hardware.
+
+The two lines above MUST precede any other import (jax pins the device count
+at first init).  Run one cell per process:
+
+    python -m repro.launch.dryrun --arch qwen3_4b --shape train_4k \
+        --mesh pod --out experiments/dryrun
+
+Scan-over-layers compiles the layer body once, so ``cost_analysis()`` counts
+it once; per-layer metrics are recovered exactly via the L1/L2 delta method
+(lower with 1 and 2 scan units, extrapolate linearly — exact for homogeneous
+stacks, ~% for zamba2's fractional tail, noted in EXPERIMENTS.md).
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import optim  # noqa: E402
+from repro.launch import hlo  # noqa: E402
+from repro.launch import specs as S  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import registry  # noqa: E402
+from repro.train import TrainStepConfig, make_train_step  # noqa: E402
+
+
+def scan_unit(cfg) -> int:
+    if cfg.family == "hybrid" and cfg.attn_every:
+        return cfg.attn_every
+    if cfg.family == "ssm" and cfg.slstm_every:
+        return cfg.slstm_every
+    return 1
+
+
+def with_layers(cfg, units: int):
+    """Reduced-depth, UNROLLED variant for exact per-layer metric deltas —
+    XLA's cost analysis counts a while-loop body once regardless of trip
+    count, so the L1/L2 probes must not use lax.scan."""
+    unit = scan_unit(cfg)
+    n = cfg.moe_first_dense + unit * units
+    kw = {"n_layers": n, "unroll": True}
+    if cfg.family == "audio":
+        kw["enc_layers"] = units
+    return dataclasses.replace(cfg, **kw)
+
+
+def lower_cell(cfg, mesh, cell: S.Cell, compile_: bool = True,
+               opts: tuple[str, ...] = ()):
+    """Build + lower + (optionally) compile one cell; returns (metrics, s).
+
+    ``opts`` — §Perf hillclimb knobs:
+      remat_dots   save matmul results in remat (backward skips the
+                   recompute of projections AND their collectives)
+      no_fsdp      weights TP-sharded only, replicated over DP (kills the
+                   per-layer parameter all-gathers; needs opt state to fit)
+      serve_repl   serving layout: same as no_fsdp for decode/prefill cells
+    """
+    mod = registry.get_module(cfg)
+    rep = NamedSharding(mesh, P())
+    if "remat_dots" in opts:
+        cfg = dataclasses.replace(cfg, remat_policy="dots")
+    if "remat_outs" in opts:
+        cfg = dataclasses.replace(cfg, remat_policy="outs")
+    if "dp_over_model" in opts:
+        from repro.models import layers as _L
+        _L.set_logical_axes(dp=("pod", "data", "model"), tp=None)
+        S.set_dp_axes(("pod", "data", "model"))
+    if "chunk_attn" in opts:
+        from repro.models import layers as _L
+        _L.set_chunked_threshold(2048)
+    train_fsdp = "no_fsdp" not in opts
+    serve_fsdp = "serve_repl" not in opts
+
+    if cell.kind == "train":
+        loss = lambda p, b: mod.loss_fn(p, cfg, b)
+        ts = make_train_step(loss, TrainStepConfig())
+
+        def step_fn(params, opt_state, batch, step):
+            params, opt_state, _, metrics = ts(params, opt_state, (), batch, step)
+            return params, opt_state, metrics
+
+        pshape = S.param_shapes(cfg)
+        layout = "fsdp_all" if "dp_over_model" in opts else "2d"
+        pshard = S.param_shardings(cfg, mesh, pshape, fsdp=train_fsdp,
+                                   layout=layout)
+        oshape = jax.eval_shape(optim.adamw_init, pshape)
+        oshard = S.opt_shardings(cfg, mesh, pshard)
+        tok_sds, tok_shd = S.token_specs(cfg, mesh, cell.global_batch,
+                                         cell.seq_len)
+        batch_sds = {"tokens": tok_sds, "labels": tok_sds}
+        batch_shd = {"tokens": tok_shd, "labels": tok_shd}
+        fe_sds, fe_shd = S.frontend_specs(cfg, mesh, cell.global_batch)
+        if fe_sds is not None:
+            batch_sds["prefix_embeds"] = fe_sds
+            batch_shd["prefix_embeds"] = fe_shd
+        step_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        in_shd = (pshard, oshard, batch_shd, rep)
+        out_shd = (pshard, oshard,
+                   {"loss": rep, "grad_norm": rep, "lr": rep})
+        jitted = jax.jit(step_fn, in_shardings=in_shd, out_shardings=out_shd)
+        args = (pshape, oshape, batch_sds, step_sds)
+
+    elif cell.kind == "prefill":
+        pshape = S.param_shapes(cfg)
+        pshard = S.param_shardings(cfg, mesh, pshape, fsdp=serve_fsdp)
+        tok_sds, tok_shd = S.token_specs(cfg, mesh, cell.global_batch,
+                                         cell.seq_len)
+        fe_sds, fe_shd = S.frontend_specs(cfg, mesh, cell.global_batch)
+        if cfg.family == "audio":
+            def step_fn(params, tokens, frames):
+                logits, _ = mod.forward(params, cfg, tokens, frames)
+                return logits[:, -1:]
+            jitted = jax.jit(step_fn, in_shardings=(pshard, tok_shd, fe_shd))
+            args = (pshape, tok_sds, fe_sds)
+        elif cfg.frontend:
+            def step_fn(params, tokens, prefix):
+                return mod.prefill(params, cfg, tokens, prefix)
+            jitted = jax.jit(step_fn, in_shardings=(pshard, tok_shd, fe_shd))
+            args = (pshape, tok_sds, fe_sds)
+        else:
+            def step_fn(params, tokens):
+                return mod.prefill(params, cfg, tokens)
+            jitted = jax.jit(step_fn, in_shardings=(pshard, tok_shd))
+            args = (pshape, tok_sds)
+
+    else:  # decode: one new token against a seq_len-deep cache
+        pshape = S.param_shapes(cfg)
+        pshard = S.param_shardings(cfg, mesh, pshape, fsdp=serve_fsdp)
+        B = cell.global_batch
+        cshape = S.cache_shapes(cfg, B, cell.seq_len)
+        cshard = S.cache_shardings(cfg, mesh, cshape, B,
+                                   seq_shard=("seq_shard" in opts))
+        tok_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        tok_shd = NamedSharding(mesh, P(S._dp(mesh, B) or None, None))
+        pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def step_fn(params, token, cache, pos):
+            return mod.decode_step(params, cfg, token, cache, pos)
+
+        jitted = jax.jit(step_fn,
+                         in_shardings=(pshard, tok_shd, cshard, rep),
+                         out_shardings=(None, cshard))
+        args = (pshape, tok_sds, cshape, pos_sds)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        lowered = jitted.lower(*args)
+        if not compile_:
+            return {"lower_only": True}, time.time() - t0
+        compiled = lowered.compile()
+    metrics = hlo.analyze_compiled(compiled)
+    metrics["compile_s"] = time.time() - t0
+    return metrics, time.time() - t0
+
+
+def _scaled_full(cfg, m_full, m1, m2):
+    """Exact per-layer extrapolation: full = L1 + (units−1)·(L2−L1)."""
+    unit = scan_unit(cfg)
+    units_full = (cfg.n_layers - cfg.moe_first_dense) / unit
+    out = dict(m_full)
+    for key in ("flops", "bytes_accessed", "transcendentals"):
+        d = m2[key] - m1[key]
+        out[key + "_scaled"] = m1[key] + (units_full - 1) * d
+    coll1 = m1["collectives"].get("total", 0.0)
+    coll2 = m2["collectives"].get("total", 0.0)
+    out["collective_bytes_scaled"] = coll1 + (units_full - 1) * (coll2 - coll1)
+    out["units_full"] = units_full
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, scale_metrics: bool = True,
+             opts: tuple[str, ...] = ()):
+    cfg = registry.get_config(arch)
+    cell = S.get_cell(arch, shape)
+    ok, why = registry.shape_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind, "applicable": ok,
+           "opts": list(opts)}
+    if not ok:
+        rec["skip_reason"] = why
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    try:
+        m_full, _ = lower_cell(cfg, mesh, cell, opts=opts)
+        rec.update(m_full)
+        rec["ok"] = True
+        if scale_metrics and mesh_kind == "pod":
+            m1, _ = lower_cell(with_layers(cfg, 1), mesh, cell, opts=opts)
+            m2, _ = lower_cell(with_layers(cfg, 2), mesh, cell, opts=opts)
+            rec.update(_scaled_full(cfg, m_full, m1, m2))
+    except Exception as e:  # a failure here is a bug in the system
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(S.SHAPES))
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-scale-metrics", action="store_true")
+    ap.add_argument("--opts", default="",
+                    help="comma-separated hillclimb options "
+                         "(remat_dots,no_fsdp,serve_repl)")
+    args = ap.parse_args()
+    assert len(jax.devices()) == 512, "dryrun needs the 512 fake devices"
+    opts = tuple(o for o in args.opts.split(",") if o)
+    rec = run_cell(registry.normalize(args.arch), args.shape, args.mesh,
+                   scale_metrics=not args.no_scale_metrics, opts=opts)
+    os.makedirs(args.out, exist_ok=True)
+    suffix = ("__" + "_".join(opts)) if opts else ""
+    path = os.path.join(args.out,
+                        f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if rec.get("ok"):
+        mem = rec.get("memory") or {}
+        print(f"OK {rec['arch']} {rec['shape']} {rec['mesh']} "
+              f"flops={rec.get('flops_scaled', rec.get('flops', 0)):.3e} "
+              f"args={mem.get('argument_bytes', 0)/2**30:.2f}GiB "
+              f"temp={mem.get('temp_bytes', 0)/2**30:.2f}GiB "
+              f"compile={rec.get('compile_s', 0):.0f}s")
+    elif rec.get("applicable"):
+        print(f"FAIL {rec['arch']} {rec['shape']} {rec['mesh']}: "
+              f"{rec.get('error')}")
+    else:
+        print(f"SKIP {rec['arch']} {rec['shape']}: {rec.get('skip_reason')}")
+    print(json.dumps({k: v for k, v in rec.items() if k != "traceback"})[:800])
+
+
+if __name__ == "__main__":
+    main()

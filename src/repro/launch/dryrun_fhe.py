@@ -1,0 +1,118 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""FHE dry-run: paper-scale CKKS key-switching (the paper's dominant op) on
+the CiFHER cluster meshes — lower + compile + roofline terms.
+
+Cells: hybrid key-switching of one poly at N=2^16, ℓ=48, K=12, dnum=4
+(paper Table I), under the two BConv mapping policies (ARK redistribution vs
+limb duplication), on the single-pod 16×16 mesh (limb×coef clusters) and the
+2×16×16 multi-pod mesh (ciphertext batch across pods).
+
+    python -m repro.launch.dryrun_fhe [--mesh pod|multipod] \
+        [--policy ark|limbdup] [--ell 48] [--out experiments/dryrun_fhe]
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core import bconv as bc  # noqa: E402
+from repro.core import ckks  # noqa: E402
+from repro.core import distributed as D  # noqa: E402
+from repro.core import params as prm  # noqa: E402
+from repro.core import poly as pl  # noqa: E402
+from repro.core.keys import EvalKey  # noqa: E402
+from repro.launch import hlo  # noqa: E402
+from repro.launch.mesh import make_fhe_mesh  # noqa: E402
+
+
+def build_ks_fn(params: prm.CkksParams, ell: int, mesh, policy, batch: int):
+    """Batched key-switch over explicit evk arrays (no host-side key material
+    enters the trace).  Returns (fn, arg ShapeDtypeStructs, in_shardings)."""
+    basis_q = params.q[:ell]
+    basis_ext = params.q + params.p
+    ndig = len(params.digit_bases(ell))
+    N = params.N
+
+    def fn(d_data, evk_a, evk_b):
+        def one(d_one, a_stk, b_stk):
+            d = pl.RnsPoly(d_one, basis_q, pl.NTT)
+            evk = EvalKey(
+                seed=0,
+                b=[pl.RnsPoly(b_stk[j], basis_ext, pl.NTT) for j in range(ndig)],
+                basis=basis_ext,
+                _a_cache=[pl.RnsPoly(a_stk[j], basis_ext, pl.NTT)
+                          for j in range(ndig)],
+            )
+            with bc.mapping_scope(mesh, policy):
+                ka, kb = ckks.key_switch(d, evk, params)
+            return ka.data, kb.data
+        return jax.vmap(one, in_axes=(0, None, None))(d_data, evk_a, evk_b)
+
+    d_sds = jax.ShapeDtypeStruct((batch, ell, N), jnp.uint32)
+    evk_sds = jax.ShapeDtypeStruct(
+        (ndig, params.L + params.K, N), jnp.uint32)
+    pod = ("pod",) if "pod" in mesh.shape else ()
+    d_shd = NamedSharding(mesh, P(pod or None, "limb", "coef"))
+    evk_shd = NamedSharding(mesh, P(None, "limb", "coef"))
+    return fn, (d_sds, evk_sds, evk_sds), (d_shd, evk_shd, evk_shd)
+
+
+def run_cell(mesh_kind: str, policy_name: str, ell: int,
+             limb_clusters: int = 16):
+    params = prm.paper_full()
+    mesh = make_fhe_mesh(multi_pod=(mesh_kind == "multipod"),
+                         limb_clusters=limb_clusters)
+    policy = (D.LIMBDUP_POLICY if policy_name == "limbdup" else D.ARK_POLICY)
+    batch = 2 if mesh_kind == "multipod" else 1
+    fn, sds, shd = build_ks_fn(params, ell, mesh, policy, batch)
+    rec = {"cell": "cifher_ks", "mesh": mesh_kind, "policy": policy_name,
+           "ell": ell, "N": params.N, "dnum": params.dnum,
+           "limb_clusters": limb_clusters, "batch": batch}
+    t0 = time.time()
+    try:
+        with jax.set_mesh(mesh):
+            compiled = jax.jit(fn, in_shardings=shd).lower(*sds).compile()
+        rec.update(hlo.analyze_compiled(compiled))
+        rec["ok"] = True
+        rec["compile_s"] = time.time() - t0
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--policy", default="limbdup", choices=["ark", "limbdup"])
+    ap.add_argument("--ell", type=int, default=48)
+    ap.add_argument("--limb-clusters", type=int, default=4)
+    ap.add_argument("--out", default="experiments/dryrun_fhe")
+    args = ap.parse_args()
+    rec = run_cell(args.mesh, args.policy, args.ell, args.limb_clusters)
+    os.makedirs(args.out, exist_ok=True)
+    name = (f"ks__{args.mesh}__{args.policy}__l{args.ell}"
+            f"__lc{args.limb_clusters}.json")
+    with open(os.path.join(args.out, name), "w") as f:
+        json.dump(rec, f, indent=1)
+    if rec.get("ok"):
+        mem = rec.get("memory") or {}
+        print(f"OK fhe-ks {args.mesh} {args.policy} ell={args.ell} "
+              f"lc={args.limb_clusters} flops={rec['flops']:.3e} "
+              f"coll={rec['collectives'].get('total', 0)/2**20:.1f}MiB "
+              f"temp={mem.get('temp_bytes', 0)/2**30:.2f}GiB "
+              f"compile={rec['compile_s']:.0f}s")
+    else:
+        print(f"FAIL fhe-ks: {rec.get('error')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Compiled-HLO analysis: collective wire bytes + roofline inputs.
+
+``cost_analysis()`` gives HLO_FLOPs / HLO_bytes but no collective traffic, so
+we parse the optimized HLO text and sum per-device wire bytes for every
+collective instruction using the standard ring/all-pairs formulas:
+
+    all-gather         out_bytes · (g−1)/g
+    reduce-scatter     in_bytes  · (g−1)/g
+    all-reduce         2 · in_bytes · (g−1)/g
+    all-to-all         in_bytes  · (g−1)/g
+    collective-permute in_bytes
+
+(g = replica-group size.)  Instructions inside ``while`` bodies (lax.scan)
+appear once in the text — callers that scan over layers must scale by trip
+count (see launch/dryrun.py's L1/L2 delta method).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[\d,]*\][^\s]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+    r"([^)]*)\)")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,\s]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Collective:
+    kind: str
+    in_bytes: int
+    out_bytes: int
+    group_size: int
+
+    @property
+    def wire_bytes(self) -> float:
+        g = max(self.group_size, 1)
+        f = (g - 1) / g
+        if self.kind == "all-gather":
+            return self.out_bytes * f
+        if self.kind == "reduce-scatter":
+            return self.in_bytes * f
+        if self.kind == "all-reduce":
+            return 2 * self.in_bytes * f
+        if self.kind == "all-to-all":
+            return self.in_bytes * f
+        if self.kind == "collective-permute":
+            return self.in_bytes
+        return 0.0
+
+
+def parse_collectives(hlo_text: str) -> list[Collective]:
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        tuple_out, single_out, kind, operands = m.groups()
+        out_bytes = _shape_bytes(tuple_out or single_out)
+        in_bytes = _shape_bytes(operands)
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len([t for t in gm.group(1).split(",") if t.strip()])
+        else:
+            gm2 = _GROUPS_IOTA_RE.search(line)
+            if gm2:
+                g = int(gm2.group(2))
+        if kind == "collective-permute":
+            g = 2
+        if in_bytes == 0 and out_bytes > 0:
+            # optimized HLO prints operands as bare %names; derive from output
+            if kind == "all-gather":
+                in_bytes = out_bytes // max(g, 1)
+            elif kind == "reduce-scatter":
+                in_bytes = out_bytes * max(g, 1)
+            else:  # all-to-all / all-reduce / collective-permute preserve size
+                in_bytes = out_bytes
+        out.append(Collective(kind=kind, in_bytes=in_bytes,
+                              out_bytes=out_bytes, group_size=g))
+    return out
+
+
+def collective_bytes(hlo_text: str) -> float:
+    """Total per-device wire bytes across all collective instructions."""
+    return sum(c.wire_bytes for c in parse_collectives(hlo_text))
+
+
+def collective_summary(hlo_text: str) -> dict[str, float]:
+    summary: dict[str, float] = {}
+    for c in parse_collectives(hlo_text):
+        summary[c.kind] = summary.get(c.kind, 0.0) + c.wire_bytes
+    summary["total"] = sum(summary.values())
+    return summary
+
+
+def analyze_compiled(compiled) -> dict:
+    """cost/memory/collective metrics of one compiled executable (per device)."""
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    txt = compiled.as_text()
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+        "collectives": collective_summary(txt),
+        "memory": None if ma is None else {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "code_bytes": ma.generated_code_size_in_bytes,
+        },
+    }

@@ -1,0 +1,42 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state; the dry-run entry point
+sets ``--xla_force_host_platform_device_count=512`` *before* any jax import.
+
+Single pod: 16×16 = 256 chips, axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — "pod" is the
+cross-pod data-parallel axis (DCN); params replicate across it, gradients
+all-reduce over it (optionally int8-compressed).
+
+The FHE side reuses the same physical meshes with the CiFHER axis names
+("limb", "coef") — see :func:`make_fhe_mesh`.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_fhe_mesh(*, multi_pod: bool = False, limb_clusters: int = 4):
+    """CiFHER cluster mesh: ``limb`` = limb clusters, ``coef`` = cores per
+    cluster (block size); 256 cores per pod, ciphertext batch across pods."""
+    coef = 256 // limb_clusters
+    if multi_pod:
+        return jax.make_mesh((2, limb_clusters, coef), ("pod", "limb", "coef"))
+    return jax.make_mesh((limb_clusters, coef), ("limb", "coef"))
+
+
+def make_host_mesh(n_devices: int | None = None):
+    """Small mesh over whatever devices exist (tests/examples)."""
+    n = n_devices or len(jax.devices())
+    d = 1
+    while d * d <= n:
+        d *= 2
+    d //= 2
+    return jax.make_mesh((d, n // d), ("data", "model"))

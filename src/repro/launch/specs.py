@@ -1,0 +1,193 @@
+"""ShapeDtypeStruct input specs + sharding specs for every (arch × shape)
+cell — the no-allocation stand-ins the dry-run lowers against."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import registry, sharding as shd
+from repro.models.config import SHAPES, ModelConfig
+
+
+DP_AXES = ("pod", "data")   # extended to include "model" by dp_over_model
+
+
+def set_dp_axes(axes):
+    global DP_AXES
+    DP_AXES = tuple(axes)
+
+
+def _dp(mesh, size: int):
+    """Data-parallel axes that evenly divide ``size`` (batch dim)."""
+    axes = [a for a in DP_AXES if a in mesh.shape]
+    keep = []
+    prod = 1
+    for a in axes:
+        if size % (prod * mesh.shape[a]) == 0:
+            keep.append(a)
+            prod *= mesh.shape[a]
+    return tuple(keep)
+
+
+def _div(n: int, mesh, axis: str) -> bool:
+    return axis in mesh.shape and n % mesh.shape[axis] == 0
+
+
+def token_specs(cfg: ModelConfig, mesh, batch: int, seq: int):
+    spec = P(_dp(mesh, batch) or None, None)
+    return (jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            NamedSharding(mesh, spec))
+
+
+def frontend_specs(cfg: ModelConfig, mesh, batch: int):
+    if not cfg.frontend:
+        return None, None
+    shape = (batch, cfg.frontend_tokens, cfg.d_model)
+    spec = P(_dp(mesh, batch) or None, None, None)
+    return (jax.ShapeDtypeStruct(shape, jnp.float32), NamedSharding(mesh, spec))
+
+
+def param_shapes(cfg: ModelConfig):
+    mod = registry.get_module(cfg)
+    return jax.eval_shape(lambda: mod.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def param_shardings(cfg: ModelConfig, mesh, params_shape=None,
+                    fsdp: bool = True, layout: str = "2d"):
+    """Parameter layouts:
+      2d          — FSDP("data") × TP("model"), the baseline;
+      replicated  — fsdp=False: TP only, DP-replicated (serving layout);
+      fsdp_all    — pure FSDP: the first sharded dim of every param shards
+                    over ALL axes, no tensor parallelism (hillclimb layout
+                    for models whose layers fit one chip)."""
+    params_shape = params_shape or param_shapes(cfg)
+    specs = shd.param_specs(params_shape, cfg, mesh)
+    all_axes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+    total = 1
+    for a in all_axes:
+        total *= mesh.shape[a]
+
+    def strip_data(spec):
+        if not fsdp:
+            cleaned = []
+            for ax in spec:
+                if ax == "data":
+                    cleaned.append(None)
+                elif isinstance(ax, tuple):
+                    t = tuple(a for a in ax if a != "data")
+                    cleaned.append(t or None)
+                else:
+                    cleaned.append(ax)
+            return P(*cleaned)
+        return spec
+
+    def fsdp_all(spec, leaf):
+        if not any(ax is not None for ax in spec):
+            return P()
+        dims = list(leaf.shape)
+        # shard the largest dim divisible by the full device count
+        order = sorted(range(len(dims)), key=lambda i: -dims[i])
+        for i in order:
+            if dims[i] % total == 0:
+                out = [None] * len(dims)
+                out[i] = all_axes if len(all_axes) > 1 else all_axes[0]
+                return P(*out)
+        return strip_data(spec)      # fallback: indivisible → TP-ish
+
+    if layout == "fsdp_all":
+        return jax.tree.map(
+            lambda s, l: NamedSharding(mesh, fsdp_all(s, l)),
+            specs, params_shape)
+    return jax.tree.map(lambda s: NamedSharding(mesh, strip_data(s)), specs)
+
+
+def opt_shardings(cfg: ModelConfig, mesh, param_shd):
+    """AdamState: step replicated; mu/nu follow the params."""
+    from repro.optim import AdamState
+    rep = NamedSharding(mesh, P())
+    return AdamState(step=rep,
+                     mu=jax.tree.map(lambda s: s, param_shd),
+                     nu=jax.tree.map(lambda s: s, param_shd))
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, seq_len: int):
+    mod = registry.get_module(cfg)
+    if cfg.family == "audio":
+        return jax.eval_shape(
+            lambda: mod.init_cache(cfg, batch, seq_len,
+                                   enc_len=cfg.frontend_tokens))
+    return jax.eval_shape(lambda: mod.init_cache(cfg, batch, seq_len))
+
+
+def cache_shardings(cfg: ModelConfig, mesh, cache_shape, batch: int,
+                    seq_shard: bool = False):
+    """KV caches: batch→dp when divisible, else time→"data"; head_dim→model.
+    Recurrent states: batch→dp, widest feature dim→model.
+
+    ``seq_shard=True`` (serving hillclimb layout): the cache's LARGEST dim —
+    the context length for attention caches — shards over "model" instead of
+    head_dim: attention against the cache becomes a local partial softmax +
+    tiny stat all-reduces (flash-decoding style) instead of gathering the
+    expanded KV."""
+    dp = _dp(mesh, batch)
+
+    def spec_for(leaf):
+        nd = len(leaf.shape)
+        if nd >= 4:                       # (L?, B, T, KV, hd) or (L?,B,H,dk,dv)
+            s = [None] * nd
+            # find the batch dim: the first dim equal to `batch`
+            try:
+                bdim = list(leaf.shape).index(batch)
+            except ValueError:
+                bdim = None
+            if bdim is not None and dp:
+                s[bdim] = dp
+            elif batch == 1 and nd >= 3 and "data" in mesh.shape:
+                # long-context single request: shard time/feature over data
+                big = max(range(nd), key=lambda i: leaf.shape[i])
+                if leaf.shape[big] % mesh.shape["data"] == 0:
+                    s[big] = "data"
+            placed = False
+            if seq_shard:
+                big = max(range(nd), key=lambda i: leaf.shape[i])
+                if s[big] is None and _div(leaf.shape[big], mesh, "model"):
+                    s[big] = "model"
+                    placed = True
+            if not placed:
+                if _div(leaf.shape[-1], mesh, "model") and s[-1] is None:
+                    s[-1] = "model"
+                elif (nd >= 2 and _div(leaf.shape[-2], mesh, "model")
+                      and s[-2] is None):
+                    s[-2] = "model"
+            return NamedSharding(mesh, P(*s))
+        if nd >= 1 and leaf.shape and dp and leaf.shape[0] == batch:
+            return NamedSharding(mesh, P(dp))
+        # 1-D slot_pos arrays etc.: shard over model when the largest dim
+        if (seq_shard and nd >= 1 and leaf.shape
+                and _div(leaf.shape[-1], mesh, "model")):
+            return NamedSharding(mesh, P(*([None] * (nd - 1) + ["model"])))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(spec_for, cache_shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    seq_len: int
+    global_batch: int
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}__{self.shape}"
+
+
+def get_cell(arch: str, shape: str) -> Cell:
+    s = SHAPES[shape]
+    return Cell(arch=arch, shape=shape, kind=s["kind"],
+                seq_len=s["seq_len"], global_batch=s["global_batch"])

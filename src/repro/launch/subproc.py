@@ -1,0 +1,38 @@
+"""Run a module in a subprocess with N fake XLA host devices.
+
+jax pins the device count at first init, so anything needing a multi-device
+mesh on CPU (distributed tests, traffic benchmarks, the dry-run) launches a
+fresh interpreter with ``--xla_force_host_platform_device_count`` set.  Tests
+and benches in the parent process keep seeing 1 device, per the harness rules.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+
+def run_with_devices(n_devices: int, module: str, *args: str,
+                     timeout: int = 900, expect_json: bool = True):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices} "
+                        + env.get("XLA_FLAGS", "")).strip()
+    root = os.path.dirname(os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__)))))
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-m", module, *args],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=env, cwd=root)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"{module} failed (rc={proc.returncode}):\n{proc.stdout[-4000:]}\n"
+            f"{proc.stderr[-4000:]}")
+    if not expect_json:
+        return proc.stdout
+    # last JSON line on stdout is the payload
+    for line in reversed(proc.stdout.strip().splitlines()):
+        line = line.strip()
+        if line.startswith("{") or line.startswith("["):
+            return json.loads(line)
+    raise RuntimeError(f"{module} produced no JSON payload:\n{proc.stdout[-2000:]}")

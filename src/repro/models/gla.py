@@ -1,0 +1,93 @@
+"""Chunked gated linear attention — the shared recurrence core.
+
+    S_t = a_t · S_{t−1} + k_t ⊗ v_t          (state S ∈ R^{dk×dv} per head)
+    y_t = q_tᵀ · S_t
+
+with per-step, per-head scalar decay a_t = exp(la_t), la_t ≤ 0.  Both assigned
+recurrent families reduce to this:
+
+* **Mamba2 SSD**: q=C, k=B, v=Δt·x, la=Δt·A        (state dk=ssm_state, dv=P)
+* **xLSTM mLSTM**: q=q/√d, k=k·exp(ĩ) folded, v=v, la=log σ(f̃); the
+  normalizer runs as an extra v-column (augmented value trick).
+
+The chunked algorithm (Mamba2 paper §6) splits the sequence into chunks of
+``chunk``: intra-chunk via an (L×L) decay-masked score matrix, inter-chunk via
+a sequential scan over per-chunk states — O(S·L) instead of O(S²), which is
+what makes the ``long_500k`` cells runnable for the SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gla_chunked(q, k, v, la, chunk: int = 256):
+    """q,k: (B,S,H,dk); v: (B,S,H,dv); la: (B,S,H) log-decays (≤0).
+
+    Returns (y: (B,S,H,dv), final_state: (B,H,dk,dv)).
+    """
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, f"seq {S} % chunk {L} != 0"
+    n = S // L
+    cast = lambda a: a.reshape(B, n, L, *a.shape[2:])
+    qc, kc, vc = cast(q), cast(k), cast(v)
+    lac = la.reshape(B, n, L, H).astype(jnp.float32)
+    c = jnp.cumsum(lac, axis=2)                       # inclusive within chunk
+    ctot = c[:, :, -1, :]                             # (B, n, H)
+
+    # ---- intra-chunk: masked decay attention --------------------------------
+    scores = jnp.einsum("bnlhk,bnmhk->bnhlm", qc, kc).astype(jnp.float32)
+    decay = c[..., :, None, :] - c[..., None, :, :]   # (B,n,L,L,H): c_l − c_m
+    decay = jnp.moveaxis(decay, -1, 2)                # (B,n,H,L,L)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    # mask BEFORE exp: the anti-causal side has decay > 0 (exp overflow) and
+    # a where() after the fact leaks NaN into the backward pass
+    decay = jnp.where(mask, decay, -1e30)
+    w = scores * jnp.exp(decay)
+    y_intra = jnp.einsum("bnhlm,bnmhv->bnlhv", w.astype(v.dtype), vc)
+
+    # ---- per-chunk outgoing state -------------------------------------------
+    kdecay = jnp.exp(ctot[:, :, None, :] - c)         # (B,n,L,H)
+    send = jnp.einsum("bnlhk,bnlh,bnlhv->bnhkv",
+                      kc.astype(jnp.float32), kdecay, vc.astype(jnp.float32))
+
+    # ---- inter-chunk scan ----------------------------------------------------
+    def step(Hst, inp):
+        q_n, c_n, ctot_n, send_n = inp
+        y_n = jnp.einsum("blhk,blh,bhkv->blhv",
+                         q_n.astype(jnp.float32), jnp.exp(c_n), Hst)
+        Hst = Hst * jnp.exp(ctot_n)[:, :, None, None] + send_n
+        return Hst, y_n
+
+    H0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+    Hend, y_inter = jax.lax.scan(
+        step, H0,
+        (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(c, 1, 0),
+         jnp.moveaxis(ctot, 1, 0), jnp.moveaxis(send, 1, 0)))
+    y_inter = jnp.moveaxis(y_inter, 0, 1)             # (B,n,L,H,dv)
+    y = (y_intra.astype(jnp.float32) + y_inter).reshape(B, S, H, dv)
+    return y.astype(v.dtype), Hend
+
+
+def gla_decode_step(state, q, k, v, la):
+    """One-token recurrence.  state: (B,H,dk,dv); q,k: (B,H,dk); v: (B,H,dv);
+    la: (B,H).  Returns (y: (B,H,dv), new_state)."""
+    state = state * jnp.exp(la.astype(jnp.float32))[:, :, None, None]
+    state = state + jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32),
+                               v.astype(jnp.float32))
+    y = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), state)
+    return y.astype(v.dtype), state
+
+
+def gla_reference(q, k, v, la):
+    """O(S²)-free sequential oracle for tests (step-by-step recurrence)."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    state = jnp.zeros((B, H, dk, dv), jnp.float32)
+    ys = []
+    for t in range(S):
+        y, state = gla_decode_step(state, q[:, t], k[:, t], v[:, t], la[:, t])
+        ys.append(y)
+    return jnp.stack(ys, axis=1), state

@@ -1,0 +1,360 @@
+"""Shared transformer layers: norms, RoPE, GQA attention (qk-norm, sliding
+window, chunked/flash-style long-context path), SwiGLU MLP, embeddings.
+
+Pure-functional: params are nested dicts of jnp arrays; every function takes
+(params, config, inputs).  Sharding is expressed separately in
+``repro.models.sharding`` as PartitionSpec trees mirroring the param trees —
+XLA's SPMD partitioner inserts the collectives.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+Params = dict
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------------
+
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+def rmsnorm(p: Params, x, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * p["scale"]).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-np.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# GQA attention
+# ----------------------------------------------------------------------------
+
+def attention_init(key, cfg: ModelConfig) -> Params:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    p = {
+        "wq": _init(ks[0], (D, H * hd), dtype=dt),
+        "wk": _init(ks[1], (D, KV * hd), dtype=dt),
+        "wv": _init(ks[2], (D, KV * hd), dtype=dt),
+        "wo": _init(ks[3], (H * hd, D), dtype=dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(cfg.hd)
+        p["k_norm"] = rmsnorm_init(cfg.hd)
+    return p
+
+
+def _qkv(p, cfg: ModelConfig, x, positions):
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, KV, hd)
+    v = (x @ p["wv"]).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_kv(k, H: int):
+    """GQA: replicate KV heads to the full head count — replication instead
+    of redistribution keeps every tensor cleanly head-sharded under TP (the
+    paper's limb-duplication argument applied to attention)."""
+    KV = k.shape[2]
+    if KV == H:
+        return k
+    return jnp.repeat(k, H // KV, axis=2)
+
+
+def _shard_heads(x):
+    """(B, S, H, hd): batch over dp axes, heads over the model axis."""
+    return maybe_shard(x, ("pod", "data"), None, "model", None)
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """q: (B,S,H,hd), k/v: (B,T,KV,hd) → (B,S,H,hd); mask (S,T) or None."""
+    B, S, H, hd = q.shape
+    k = _shard_heads(_expand_kv(k, H))
+    v = _shard_heads(_expand_kv(v, H))
+    q = _shard_heads(q)
+    logits = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)
+    logits = logits / np.sqrt(hd)
+    if mask is not None:
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", w, v)
+    return out
+
+
+def _sdpa_chunked(q, k, v, cfg: ModelConfig, q_offset: int,
+                  chunk: int = 1024, causal: bool = True):
+    """Flash-style online-softmax attention over key chunks.
+
+    Keeps the (S, chunk) score tile as the only quadratic temp — required for
+    32k+ prefill to fit HBM.  Sliding windows are folded into the mask.
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    q = _shard_heads(q)
+    k = _shard_heads(_expand_kv(k, H))
+    v = _shard_heads(_expand_kv(v, H))
+    nchunks = -(-T // chunk)
+    kpad = jnp.pad(k, ((0, 0), (0, nchunks * chunk - T), (0, 0), (0, 0)))
+    vpad = jnp.pad(v, ((0, 0), (0, nchunks * chunk - T), (0, 0), (0, 0)))
+    kc = kpad.reshape(B, nchunks, chunk, H, hd)
+    vc = vpad.reshape(B, nchunks, chunk, H, hd)
+    qpos = q_offset + jnp.arange(S)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, cidx = inp
+        kpos = cidx * chunk + jnp.arange(chunk)
+        logits = jnp.einsum("bshd,bthd->bhst", q, kb).astype(jnp.float32)
+        logits = logits / np.sqrt(hd)
+        valid = kpos[None, :] < T
+        if causal:
+            valid = valid & (kpos[None, :] <= qpos[:, None])
+        if cfg.sliding_window:
+            valid = valid & (kpos[None, :] > qpos[:, None] - cfg.sliding_window)
+        logits = jnp.where(valid[None, None], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        pexp = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + pexp.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhst,bthd->bhsd", pexp.astype(vb.dtype), vb).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, S), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    a0 = jnp.zeros((B, H, S, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.arange(nchunks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return jnp.moveaxis(out, 2, 1).astype(q.dtype)      # (B,S,H,hd)
+
+
+CHUNKED_THRESHOLD = 8192    # launch/dryrun.py's chunk_attn opt lowers this
+
+
+def set_chunked_threshold(n: int):
+    global CHUNKED_THRESHOLD
+    CHUNKED_THRESHOLD = n
+
+
+def attention(p: Params, cfg: ModelConfig, x, positions, causal: bool = True):
+    """Full self-attention over x (training / encoder)."""
+    B, S, D = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    if S > CHUNKED_THRESHOLD:
+        out = _sdpa_chunked(q, k, v, cfg, q_offset=0, causal=causal)
+    else:
+        i = jnp.arange(S)
+        mask = None
+        if causal:
+            mask = i[:, None] >= i[None, :]
+            if cfg.sliding_window:
+                mask &= i[:, None] - i[None, :] < cfg.sliding_window
+        out = _sdpa(q, k, v, mask, cfg)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def attention_decode(p: Params, cfg: ModelConfig, x, cache_k, cache_v,
+                     kpos, pos):
+    """One-token decode against a (B, T, KV, hd) cache; returns (y, k, v).
+
+    ``kpos``: (T,) the absolute position stored in each cache slot (−1 =
+    empty) — supports both linear caches (kpos = arange) and the ring-buffer
+    sliding-window cache.  ``pos``: scalar current position.  The returned
+    (k, v) are the roped new entries for the caller to write.
+    """
+    B, S, D = x.shape                                   # S == 1
+    positions = jnp.full((B, S), pos, dtype=jnp.int32)
+    q, k, v = _qkv(p, cfg, x, positions)
+    valid = (kpos >= 0) & (kpos <= pos)
+    if cfg.sliding_window:
+        valid &= kpos > pos - cfg.sliding_window
+    H = cfg.n_heads
+    # the current token's k/v are not in the cache yet — append them so the
+    # token attends to itself (cache slots carry strictly older positions)
+    ck = jnp.concatenate([_expand_kv(cache_k.astype(q.dtype), H),
+                          _expand_kv(k.astype(q.dtype), H)], axis=1)
+    cv = jnp.concatenate([_expand_kv(cache_v.astype(q.dtype), H),
+                          _expand_kv(v.astype(q.dtype), H)], axis=1)
+    valid = jnp.concatenate([valid & (kpos != pos),
+                             jnp.ones((1,), bool)])
+    logits = jnp.einsum("bshd,bthd->bhst", q, ck).astype(jnp.float32)
+    logits = logits / np.sqrt(cfg.hd)
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(cv.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", w, cv).reshape(B, 1, -1)
+    return out @ p["wo"], k, v
+
+
+# ----------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ----------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None) -> Params:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    return {
+        "wi": _init(ks[0], (D, F), dtype=dt),
+        "wg": _init(ks[1], (D, F), dtype=dt),
+        "wo": _init(ks[2], (F, D), dtype=dt),
+    }
+
+
+def mlp(p: Params, x):
+    h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    h = maybe_shard(h, ("pod", "data"), None, "model")   # F over TP axis
+    return h @ p["wo"]
+
+
+# ----------------------------------------------------------------------------
+# Embedding / head
+# ----------------------------------------------------------------------------
+
+def embedding_init(key, cfg: ModelConfig) -> Params:
+    dt = _dtype(cfg)
+    return {"table": _init(key, (cfg.padded_vocab, cfg.d_model), scale=1.0,
+                           dtype=dt)}
+
+
+def embed(p: Params, tokens):
+    x = jnp.take(p["table"], tokens, axis=0)
+    return maybe_shard(x, ("pod", "data"), None, None)
+
+
+def head_init(key, cfg: ModelConfig) -> Params:
+    return {"w": _init(key, (cfg.d_model, cfg.padded_vocab), dtype=_dtype(cfg))}
+
+
+def remat_wrap(fn, cfg):
+    """jax.checkpoint with the configured policy (hillclimb knob: 'dots'
+    saves projection/collective results so backward skips their recompute —
+    trades HBM for collective traffic)."""
+    if not cfg.remat:
+        return fn
+    policy = None
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    elif cfg.remat_policy == "outs":
+        policy = jax.checkpoint_policies.save_only_these_names(
+            "attn_out", "mlp_out")
+    return jax.checkpoint(fn, policy=policy)
+
+
+def scan_layers(body, carry, xs, unroll: bool = False):
+    """lax.scan or an unrolled Python loop (identical semantics).
+
+    Unrolled mode exists for the dry-run's per-layer metric probes: XLA's
+    cost analysis counts a while body once regardless of trip count.
+    """
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+# logical→physical axis translation for activation constraints.  The default
+# is 2-D FSDP+TP; launch/dryrun.py's `dp_over_model` hillclimb layout remaps
+# dp to all axes and drops the TP axis (pure-FSDP training for models whose
+# layer width doesn't need tensor parallelism).
+_LOGICAL = {"dp": ("pod", "data"), "tp": "model"}
+
+
+def set_logical_axes(dp=("pod", "data"), tp="model"):
+    _LOGICAL["dp"] = tuple(dp)
+    _LOGICAL["tp"] = tp
+
+
+def maybe_shard(x, *spec):
+    """with_sharding_constraint if an abstract mesh is active (no-op else)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.shape:
+        return x
+    from jax.sharding import PartitionSpec as P
+    names = set(mesh.axis_names)
+    cleaned = []
+    for s in spec:
+        if s == ("pod", "data"):
+            s = _LOGICAL["dp"]
+        elif s == "model":
+            s = _LOGICAL["tp"]
+        if isinstance(s, tuple):
+            s = tuple(a for a in s if a in names) or None
+        elif s is not None and s not in names:
+            s = None
+        cleaned.append(s)
+    return jax.lax.with_sharding_constraint(x, P(*cleaned))
+
+
+def lm_head(p: Params, x):
+    # vocab stays model-sharded through the loss (batch over pod/data)
+    return maybe_shard(x @ p["w"], ("pod", "data"), None, "model")
+
+
+def cross_entropy(logits, labels, vocab: int):
+    """Mean CE over tokens; labels < 0 are masked.
+
+    Written gather-free so the vocab axis can stay model-sharded end-to-end:
+    the gold logit is a masked sum over the (sharded) vocab dim.
+    """
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    logz = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, len(logits.shape) - 1)
+    onehot = (iota == jnp.maximum(labels, 0)[..., None])
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    losses = logz - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return (losses * mask).sum() / jnp.maximum(mask.sum(), 1.0)

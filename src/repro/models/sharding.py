@@ -1,0 +1,108 @@
+"""PartitionSpec rules for params/activations — the CiFHER mapping insight
+applied to the LM substrate.
+
+Mesh axes: ``("data", "model")`` within a pod, plus ``"pod"`` across pods.
+Params are 2-D sharded (embed-dim → "data" = FSDP, heads/ffn/experts →
+"model" = TP), replicated across "pod"; the batch shards over
+("pod", "data").  This mirrors block clustering: collectives for parameter
+gathering stay inside a pod (the "cluster"), only gradient all-reduce crosses
+pods — the same shrink-the-collective-domain argument as paper §IV.
+
+Rules are name-based on the flattened param path; a leading None covers the
+scan-stacked layer axis.  GQA KV projections with few heads (glm4's kv=2)
+keep the flattened (KV·hd) dim sharded — the head_dim splits instead; where
+even that is impossible XLA replicates (the limb-duplication analogue:
+replicate rather than redistribute).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# (regex on path, spec builder taking (data_axis, model_axis))
+_RULES = [
+    # embeddings / head
+    (r"embed/table$", lambda d, m: P(m, d)),
+    (r"head/w$", lambda d, m: P(d, m)),
+    # attention
+    (r"(attn|xattn)/w[qkv]$", lambda d, m: P(d, m)),
+    (r"(attn|xattn)/wo$", lambda d, m: P(m, d)),
+    # dense mlp
+    (r"mlp/w[ig]$", lambda d, m: P(d, m)),
+    (r"mlp/wo$", lambda d, m: P(m, d)),
+    # moe
+    (r"moe/router$", lambda d, m: P(d, None)),
+    (r"moe/w[ig]$", lambda d, m: P(None, d, m)),     # experts repl, F → model
+    (r"moe/wo$", lambda d, m: P(None, m, d)),
+    (r"moe/shared/w[ig]$", lambda d, m: P(d, m)),
+    (r"moe/shared/wo$", lambda d, m: P(m, d)),
+    # mamba2
+    (r"mamba/in_proj$", lambda d, m: P(d, m)),
+    (r"mamba/conv_w$", lambda d, m: P(None, m)),
+    (r"mamba/out_proj$", lambda d, m: P(m, d)),
+    # xlstm
+    (r"mlstm/up$", lambda d, m: P(d, m)),
+    (r"mlstm/w[qkv]$", lambda d, m: P(d, m)),
+    (r"mlstm/w[if]$", lambda d, m: P(d, None)),
+    (r"mlstm/down$", lambda d, m: P(m, d)),
+    (r"slstm/w[xh]$", lambda d, m: P(d, m)),
+    (r"slstm/ff_up$", lambda d, m: P(d, m)),
+    (r"slstm/ff_down$", lambda d, m: P(m, d)),
+]
+
+
+def moe_expert_sharded_rules(n_experts: int, model_size: int):
+    """True expert parallelism when E divides the model axis (deepseek 64)."""
+    if n_experts % model_size == 0:
+        return [
+            (r"moe/w[ig]$", lambda d, m: P(m, d, None)),
+            (r"moe/wo$", lambda d, m: P(m, None, d)),
+        ]
+    return []
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params, cfg, mesh, data_axis="data", model_axis="model"):
+    """Spec tree mirroring ``params``; scan-stacked leaves get a leading None."""
+    extra = moe_expert_sharded_rules(cfg.moe_experts,
+                                     mesh.shape.get(model_axis, 1)) \
+        if cfg.moe_experts else []
+    rules = extra + _RULES
+
+    def spec_for(path, leaf):
+        ps = _path_str(path)
+        stacked = bool(re.search(r"(^|/)(layers|enc_layers|dec_layers)/", ps))
+        for pat, builder in rules:
+            if re.search(pat, ps):
+                s = builder(data_axis, model_axis)
+                if len(s) > leaf.ndim - (1 if stacked else 0):
+                    s = P(*list(s)[:leaf.ndim - (1 if stacked else 0)])
+                return P(None, *s) if stacked else s
+        # norms, scalars, biases: replicated
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def batch_axes(mesh) -> tuple:
+    """Data-parallel axes for the batch dim: ("pod","data") when multi-pod."""
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def input_sharding(mesh, batch_shardable: bool = True):
+    if not batch_shardable:
+        return P()
+    return P(batch_axes(mesh))

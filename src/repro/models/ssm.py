@@ -1,0 +1,122 @@
+"""Mamba2 block (SSD) on the shared chunked-GLA core (zamba2 backbone).
+
+Projections follow the Mamba2 layout: one input projection produces
+(z | x | B | C | dt); the SSD recurrence runs per head with scalar decay
+A·Δt; a depthwise causal conv precedes the SSM; gated RMSNorm + out-proj
+close the block.  Decode keeps (conv window, SSD state) as the cache —
+constant memory, which is what lets the hybrid/ssm archs run ``long_500k``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .gla import gla_chunked, gla_decode_step
+from .layers import Params, _dtype, _init, rmsnorm, rmsnorm_init
+
+CONV_K = 4
+
+
+def mamba_init(key, cfg: ModelConfig) -> Params:
+    D = cfg.d_model
+    Din = cfg.d_inner
+    H = cfg.ssm_heads
+    Nst = cfg.ssm_state
+    G = 1                                    # single B/C group
+    ks = jax.random.split(key, 6)
+    dt = _dtype(cfg)
+    proj_out = 2 * Din + 2 * G * Nst + H     # z, x, B, C, dt
+    return {
+        "in_proj": _init(ks[0], (D, proj_out), dtype=dt),
+        "conv_w": _init(ks[1], (CONV_K, Din + 2 * G * Nst), scale=0.5, dtype=dt),
+        "A_log": jnp.log(jnp.linspace(1.0, float(H), H, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "norm": rmsnorm_init(Din),
+        "out_proj": _init(ks[2], (Din, D), dtype=dt),
+    }
+
+
+def _split(p, cfg: ModelConfig, proj):
+    Din, H, Nst = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state
+    z = proj[..., :Din]
+    x = proj[..., Din:2 * Din]
+    Bm = proj[..., 2 * Din:2 * Din + Nst]
+    Cm = proj[..., 2 * Din + Nst:2 * Din + 2 * Nst]
+    dt = proj[..., 2 * Din + 2 * Nst:]
+    return z, x, Bm, Cm, dt
+
+
+def _causal_conv(xbc, w, state=None):
+    """Depthwise causal conv over (B, S, C); state: (B, K−1, C) for decode."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([state.astype(xbc.dtype), xbc], axis=1)
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out), pad[:, -(K - 1):, :]
+
+
+def mamba_block(p: Params, cfg: ModelConfig, u, chunk: int = 256):
+    """u: (B, S, D) → (B, S, D)."""
+    B, S, D = u.shape
+    H, P, Nst = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    proj = u @ p["in_proj"]
+    z, x, Bm, Cm, dtr = _split(p, cfg, proj)
+    xbc, _ = _causal_conv(jnp.concatenate([x, Bm, Cm], axis=-1), p["conv_w"])
+    x, Bm, Cm = (xbc[..., :cfg.d_inner],
+                 xbc[..., cfg.d_inner:cfg.d_inner + Nst],
+                 xbc[..., cfg.d_inner + Nst:])
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                       # (H,) < 0
+    xh = x.reshape(B, S, H, P)
+    q = jnp.repeat(Cm[:, :, None, :], H, axis=2)                   # (B,S,H,N)
+    k = jnp.repeat(Bm[:, :, None, :], H, axis=2)
+    v = xh * dt[..., None].astype(xh.dtype)
+    la = dt * A                                                    # (B,S,H)
+    y, _ = gla_chunked(q, k, v, la, chunk=min(chunk, S))
+    y = y + xh * p["D_skip"][None, None, :, None]
+    y = y.reshape(B, S, cfg.d_inner)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return (y @ p["out_proj"]).astype(u.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Decode (constant-memory state)
+# ----------------------------------------------------------------------------
+
+def mamba_cache_init(cfg: ModelConfig, batch: int):
+    H, P, Nst = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, cfg.d_inner + 2 * Nst),
+                          jnp.float32),
+        "ssd": jnp.zeros((batch, H, Nst, P), jnp.float32),
+    }
+
+
+def mamba_decode_step(p: Params, cfg: ModelConfig, u, cache):
+    """u: (B, 1, D); cache: {conv, ssd} → (y (B,1,D), cache)."""
+    B = u.shape[0]
+    H, P, Nst = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    proj = u @ p["in_proj"]
+    z, x, Bm, Cm, dtr = _split(p, cfg, proj)
+    xbc, conv_state = _causal_conv(
+        jnp.concatenate([x, Bm, Cm], axis=-1), p["conv_w"], cache["conv"])
+    x, Bm, Cm = (xbc[..., :cfg.d_inner],
+                 xbc[..., cfg.d_inner:cfg.d_inner + Nst],
+                 xbc[..., cfg.d_inner + Nst:])
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(B, H, P)
+    q = jnp.repeat(Cm[:, 0, None, :], H, axis=1)
+    k = jnp.repeat(Bm[:, 0, None, :], H, axis=1)
+    v = xh * dt[..., None].astype(xh.dtype)
+    y, ssd = gla_decode_step(cache["ssd"], q, k, v, dt * A)
+    y = y + xh * p["D_skip"][None, :, None]
+    y = y.reshape(B, 1, cfg.d_inner)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return ((y @ p["out_proj"]).astype(u.dtype),
+            {"conv": conv_state.astype(jnp.float32), "ssd": ssd})

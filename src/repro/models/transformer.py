@@ -1,0 +1,404 @@
+"""Decoder-only LM assembly for the dense / moe / vlm / hybrid / ssm families.
+
+One scanned superblock per layer (stacked params → single-body compile even at
+60+ layers); heterogeneous families use ``lax.cond`` inside the body:
+
+* hybrid (zamba2): every layer is a Mamba2 block; every ``attn_every``-th
+  layer additionally applies the **weight-shared** attention+MLP block
+  (params live outside the scan — genuinely shared, as in the paper).
+* ssm (xlstm): mLSTM body with an sLSTM branch every ``slstm_every`` layers.
+* vlm (llava): precomputed patch embeddings (anyres frontend stub) are
+  prepended to the token embeddings.
+
+Serving uses per-layer caches stacked along the scan axis: attention KV
+(linear or sliding-window ring buffer), Mamba2 (conv window + SSD state),
+mLSTM/sLSTM recurrent states.  All decode caches are constant-size per step;
+full-attention caches grow with context, which is why ``long_500k`` is only
+wired for the sub-quadratic families.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax.ad_checkpoint import checkpoint_name
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from . import xlstm as xl
+from .config import ModelConfig
+
+Params = dict
+
+
+# ----------------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig, layer_idx: int = 0) -> Params:
+    ks = jax.random.split(key, 4)
+    if cfg.family in ("dense", "vlm", "audio"):
+        return {
+            "ln1": L.rmsnorm_init(cfg.d_model),
+            "attn": L.attention_init(ks[0], cfg),
+            "ln2": L.rmsnorm_init(cfg.d_model),
+            "mlp": L.mlp_init(ks[1], cfg),
+        }
+    if cfg.family == "moe":
+        return {
+            "ln1": L.rmsnorm_init(cfg.d_model),
+            "attn": L.attention_init(ks[0], cfg),
+            "ln2": L.rmsnorm_init(cfg.d_model),
+            "moe": moe_mod.moe_init(ks[1], cfg),
+        }
+    if cfg.family == "hybrid":
+        return {
+            "ln1": L.rmsnorm_init(cfg.d_model),
+            "mamba": ssm_mod.mamba_init(ks[0], cfg),
+        }
+    if cfg.family == "ssm":  # xlstm
+        return {
+            "ln1": L.rmsnorm_init(cfg.d_model),
+            "mlstm": xl.mlstm_init(ks[0], cfg),
+            "ln1s": L.rmsnorm_init(cfg.d_model),
+            "slstm": xl.slstm_init(ks[1], cfg),
+        }
+    raise ValueError(cfg.family)
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    n_scanned = cfg.n_layers - cfg.moe_first_dense
+    layer_keys = jax.random.split(ks[0], n_scanned)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys)
+    p = {
+        "embed": L.embedding_init(ks[1], cfg),
+        "layers": layers,
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+        "head": L.head_init(ks[2], cfg),
+    }
+    if cfg.moe_first_dense:
+        # deepseek-moe: the first layer(s) are dense, with FFN width matched
+        # to the activated expert width; unrolled outside the scan.
+        dense_ff = cfg.d_ff * (cfg.moe_top_k + cfg.moe_shared_experts)
+        fk = jax.random.split(ks[5], cfg.moe_first_dense)
+        p["first_layers"] = [{
+            "ln1": L.rmsnorm_init(cfg.d_model),
+            "attn": L.attention_init(jax.random.fold_in(k, 0), cfg),
+            "ln2": L.rmsnorm_init(cfg.d_model),
+            "mlp": L.mlp_init(jax.random.fold_in(k, 1), cfg, d_ff=dense_ff),
+        } for k in fk]
+    if cfg.family == "hybrid":
+        shared_cfg = cfg
+        p["shared_attn"] = {
+            "ln1": L.rmsnorm_init(cfg.d_model),
+            "attn": L.attention_init(ks[3], shared_cfg),
+            "ln2": L.rmsnorm_init(cfg.d_model),
+            "mlp": L.mlp_init(ks[4], shared_cfg),
+        }
+    return p
+
+
+# ----------------------------------------------------------------------------
+# forward (training / full-sequence)
+# ----------------------------------------------------------------------------
+
+def _attn_mlp_block(lp, cfg, x, positions):
+    """Standard pre-norm attention + (mlp|moe) block. Returns (x, aux)."""
+    h = L.attention(lp["attn"], cfg, L.rmsnorm(lp["ln1"], x, cfg.norm_eps),
+                    positions)
+    h = checkpoint_name(h, "attn_out")
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    y = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    if "moe" in lp:
+        out, aux = moe_mod.moe(lp["moe"], cfg, y)
+    else:
+        out = L.mlp(lp["mlp"], y)
+    out = checkpoint_name(out, "mlp_out")
+    return x + out, aux
+
+
+def _superblock(cfg: ModelConfig, shared, lp, x, positions, idx):
+    """One scanned layer body. Returns (x, aux).
+
+    The residual stream is d_model-sharded over the TP axis at layer
+    boundaries (sequence-parallel style): the scan's saved backward residuals
+    shrink by the TP width — without this, remat training of the large archs
+    exceeds HBM on the saved (L, B, S, D) boundary activations.
+    """
+    x = L.maybe_shard(x, ("pod", "data"), None, "model")
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        x, aux = _attn_mlp_block(lp, cfg, x, positions)
+    elif cfg.family == "hybrid":
+        x = x + ssm_mod.mamba_block(
+            lp["mamba"], cfg, L.rmsnorm(lp["ln1"], x, cfg.norm_eps))
+        if cfg.attn_every:
+            def with_attn(xx):
+                out, _ = _attn_mlp_block(shared, cfg, xx, positions)
+                return out
+            x = jax.lax.cond(
+                (idx + 1) % cfg.attn_every == 0, with_attn, lambda xx: xx, x)
+    elif cfg.family == "ssm":
+        def do_slstm(xx):
+            return xx + xl.slstm_block(
+                lp["slstm"], cfg, L.rmsnorm(lp["ln1s"], xx, cfg.norm_eps))
+
+        def do_mlstm(xx):
+            return xx + xl.mlstm_block(
+                lp["mlstm"], cfg, L.rmsnorm(lp["ln1"], xx, cfg.norm_eps))
+
+        if cfg.slstm_every:
+            x = jax.lax.cond((idx + 1) % cfg.slstm_every == 0,
+                             do_slstm, do_mlstm, x)
+        else:
+            x = do_mlstm(x)
+    else:
+        raise ValueError(cfg.family)
+    return x, aux
+
+
+def forward(params: Params, cfg: ModelConfig, tokens, prefix_embeds=None):
+    """tokens: (B, S) int32; prefix_embeds: (B, P, D) frontend stub (vlm/audio).
+    Returns logits (B, S_total, vocab) and aux loss."""
+    x = L.embed(params["embed"], tokens) * np.sqrt(cfg.d_model)
+    x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    shared = params.get("shared_attn")
+
+    for flp in params.get("first_layers", []):   # deepseek dense head layers
+        x, _ = _attn_mlp_block(flp, cfg, x, positions)
+
+    fn = L.remat_wrap(functools.partial(_superblock, cfg, shared), cfg)
+
+    n_scanned = jax.tree.leaves(params["layers"])[0].shape[0]
+    if cfg.unroll:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(n_scanned):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, a = fn(lp, x, positions, jnp.int32(i))
+            aux = aux + a
+    else:
+        def body(carry, scanned):
+            x, aux, idx = carry
+            x, a = fn(scanned, x, positions, idx)
+            return (x, aux + a, idx + 1), None
+
+        (x, aux, _), _ = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+            params["layers"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.lm_head(params["head"], x)
+    return logits, aux
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch) -> jnp.ndarray:
+    """batch: {tokens (B,S), labels (B,S), [prefix_embeds]}."""
+    logits, aux = forward(params, cfg, batch["tokens"],
+                          batch.get("prefix_embeds"))
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:      # vlm/audio prefix positions
+        logits = logits[:, -labels.shape[1]:]
+    return L.cross_entropy(logits, labels, cfg.vocab) + 0.01 * aux
+
+
+# ----------------------------------------------------------------------------
+# serving: caches, prefill, decode
+# ----------------------------------------------------------------------------
+
+def _cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.sliding_window:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> Params:
+    """Per-layer caches stacked on a leading L axis (scan-compatible)."""
+    Lx = cfg.n_layers
+
+    def stack(tree):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (Lx,) + a.shape), tree)
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        T = _cache_len(cfg, seq_len)
+        dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        one = {
+            "k": jnp.zeros((batch, T, cfg.n_kv_heads, cfg.hd), dt),
+            "v": jnp.zeros((batch, T, cfg.n_kv_heads, cfg.hd), dt),
+            "slot_pos": jnp.full((T,), -1, jnp.int32),
+        }
+        if cfg.moe_first_dense:
+            Lx = cfg.n_layers - cfg.moe_first_dense
+            return {
+                "layers": jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (Lx,) + a.shape), one),
+                "first": [jax.tree.map(jnp.copy, one)
+                          for _ in range(cfg.moe_first_dense)],
+            }
+        return stack(one)
+    if cfg.family == "hybrid":
+        cache = {"mamba": stack(ssm_mod.mamba_cache_init(cfg, batch))}
+        if cfg.attn_every:
+            T = _cache_len(cfg, seq_len)
+            dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+            n_attn = cfg.n_layers // cfg.attn_every
+            cache["attn"] = {
+                "k": jnp.zeros((n_attn, batch, T, cfg.n_kv_heads, cfg.hd), dt),
+                "v": jnp.zeros((n_attn, batch, T, cfg.n_kv_heads, cfg.hd), dt),
+                "slot_pos": jnp.full((n_attn, T), -1, jnp.int32),
+            }
+        return cache
+    if cfg.family == "ssm":
+        return {
+            "mlstm": stack(xl.mlstm_cache_init(cfg, batch)),
+            "slstm": stack(xl.slstm_cache_init(cfg, batch)),
+        }
+    raise ValueError(cfg.family)
+
+
+def _write_kv(cache_layer, k, v, pos, window: int):
+    """Write one token's (B,1,KV,hd) k/v at position ``pos``."""
+    T = cache_layer["k"].shape[1]
+    idx = pos % T if window else jnp.minimum(pos, T - 1)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_layer["k"], k, idx, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache_layer["v"], v, idx, axis=1)
+    sp = jax.lax.dynamic_update_slice_in_dim(
+        cache_layer["slot_pos"], jnp.full((1,), pos, jnp.int32), idx, axis=0)
+    return {"k": ck, "v": cv, "slot_pos": sp}
+
+
+def decode_step(params: Params, cfg: ModelConfig, token, cache, pos):
+    """token: (B, 1) int32; pos: scalar int32. Returns (logits, new_cache)."""
+    x = L.embed(params["embed"], token) * np.sqrt(cfg.d_model)
+    x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    shared = params.get("shared_attn")
+    window = cfg.sliding_window
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        def one_layer(lp, cl, x):
+            h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            y, k, v = L.attention_decode(lp["attn"], cfg, h, cl["k"], cl["v"],
+                                         cl["slot_pos"], pos)
+            ncl = _write_kv(cl, k, v, pos, window)
+            x = x + y
+            h2 = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+            if "moe" in lp:
+                out, _ = moe_mod.moe(lp["moe"], cfg, h2)
+            else:
+                out = L.mlp(lp["mlp"], h2)
+            return x + out, ncl
+
+        scan_cache = cache["layers"] if cfg.moe_first_dense else cache
+        new_first = []
+        for flp, fcl in zip(params.get("first_layers", []),
+                            cache.get("first", []) if cfg.moe_first_dense else []):
+            x, nfc = one_layer(flp, fcl, x)
+            new_first.append(nfc)
+
+        def body(x, scanned):
+            lp, cl = scanned
+            x, ncl = one_layer(lp, cl, x)
+            return x, ncl
+
+        x, new_scan = L.scan_layers(body, x, (params["layers"], scan_cache),
+                                    unroll=cfg.unroll)
+        new_cache = ({"layers": new_scan, "first": new_first}
+                     if cfg.moe_first_dense else new_scan)
+
+    elif cfg.family == "hybrid":
+        attn_cache = cache.get("attn")
+
+        def body(carry, scanned):
+            x, idx, aidx, acache = carry
+            lp, mcl = scanned
+            h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            y, nmcl = ssm_mod.mamba_decode_step(lp["mamba"], cfg, h, mcl)
+            x = x + y
+            if cfg.attn_every:
+                def with_attn(op):
+                    xx, ai, ac = op
+                    cl = jax.tree.map(lambda a: a[ai], ac)
+                    hh = L.rmsnorm(shared["ln1"], xx, cfg.norm_eps)
+                    yy, k, v = L.attention_decode(
+                        shared["attn"], cfg, hh, cl["k"], cl["v"],
+                        cl["slot_pos"], pos)
+                    ncl = _write_kv(cl, k, v, pos, window)
+                    ac = jax.tree.map(
+                        lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                            full, new.astype(full.dtype), ai, 0), ac, ncl)
+                    xx = xx + yy
+                    h2 = L.rmsnorm(shared["ln2"], xx, cfg.norm_eps)
+                    return xx + L.mlp(shared["mlp"], h2), ai + 1, ac
+
+                x, aidx, acache = jax.lax.cond(
+                    (idx + 1) % cfg.attn_every == 0, with_attn,
+                    lambda op: op, (x, aidx, acache))
+            return (x, idx + 1, aidx, acache), nmcl
+
+        (x, _, _, new_attn), new_mamba = L.scan_layers(
+            body, (x, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+                   attn_cache), (params["layers"], cache["mamba"]),
+            unroll=cfg.unroll)
+        new_cache = {"mamba": new_mamba}
+        if cfg.attn_every:
+            new_cache["attn"] = new_attn
+
+    elif cfg.family == "ssm":
+        def body(carry, scanned):
+            x, idx = carry
+            lp, mcl, scl = scanned
+
+            def do_slstm(op):
+                xx = op
+                y, ns = xl.slstm_decode_step(
+                    lp["slstm"], cfg,
+                    L.rmsnorm(lp["ln1s"], xx, cfg.norm_eps), scl)
+                ym, nm = xl.mlstm_decode_step(
+                    lp["mlstm"], cfg,
+                    L.rmsnorm(lp["ln1"], xx, cfg.norm_eps), mcl)
+                del ym
+                return xx + y, nm, ns
+
+            def do_mlstm(op):
+                xx = op
+                y, nm = xl.mlstm_decode_step(
+                    lp["mlstm"], cfg,
+                    L.rmsnorm(lp["ln1"], xx, cfg.norm_eps), mcl)
+                ys, ns = xl.slstm_decode_step(
+                    lp["slstm"], cfg,
+                    L.rmsnorm(lp["ln1s"], xx, cfg.norm_eps), scl)
+                del ys
+                return xx + y, nm, ns
+
+            if cfg.slstm_every:
+                x, nm, ns = jax.lax.cond((idx + 1) % cfg.slstm_every == 0,
+                                         do_slstm, do_mlstm, x)
+            else:
+                x, nm, ns = do_mlstm(x)
+            return (x, idx + 1), (nm, ns)
+
+        (x, _), (new_m, new_s) = L.scan_layers(
+            body, (x, jnp.zeros((), jnp.int32)),
+            (params["layers"], cache["mlstm"], cache["slstm"]),
+            unroll=cfg.unroll)
+        new_cache = {"mlstm": new_m, "slstm": new_s}
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.lm_head(params["head"], x)
+    return logits, new_cache
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens, prefix_embeds=None):
+    """Full-sequence prefill; returns last-position logits (cache fill is
+    modeled by the same forward graph — the dry-run measures this program)."""
+    logits, _ = forward(params, cfg, tokens, prefix_embeds)
+    return logits[:, -1:]

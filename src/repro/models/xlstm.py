@@ -1,0 +1,172 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel via chunked GLA with the
+augmented-normalizer trick) and sLSTM (scalar memory, sequential scan),
+interleaved 7:1 as in the xLSTM-1.3B configuration.
+
+mLSTM recurrence (per head):     C_t = f_t·C_{t−1} + i_t·k_t⊗v_t
+                                 n_t = f_t·n_{t−1} + i_t·k_t
+                                 h_t = (qᵀC_t) / max(|qᵀn_t|, 1)
+The normalizer n runs as an extra value column inside the same GLA call.
+Input gates i_t = exp(ĩ_t) are folded into k (clamped for stability).
+
+sLSTM runs a true sequential lax.scan (its memory mixing cannot be
+parallelized over time) — acceptable at 4k train and O(1) per decode step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .gla import gla_chunked, gla_decode_step
+from .layers import Params, _dtype, _init, rmsnorm, rmsnorm_init
+
+MLSTM_PROJ = 2.0    # up-projection factor (paper)
+SLSTM_PROJ = 4.0 / 3.0
+IGATE_CLAMP = 8.0
+
+
+# ----------------------------------------------------------------------------
+# mLSTM
+# ----------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig) -> Params:
+    D = cfg.d_model
+    Dm = int(MLSTM_PROJ * D)
+    H = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    dt = _dtype(cfg)
+    return {
+        "up": _init(ks[0], (D, 2 * Dm), dtype=dt),          # x-branch, z-gate
+        "wq": _init(ks[1], (Dm, Dm), dtype=dt),
+        "wk": _init(ks[2], (Dm, Dm), dtype=dt),
+        "wv": _init(ks[3], (Dm, Dm), dtype=dt),
+        "wi": _init(ks[4], (Dm, H), scale=0.02, dtype=jnp.float32),
+        "wf": _init(ks[5], (Dm, H), scale=0.02, dtype=jnp.float32),
+        "fbias": jnp.full((H,), 3.0, jnp.float32),           # open forget gates
+        "norm": rmsnorm_init(Dm),
+        "down": _init(ks[6], (Dm, D), dtype=dt),
+    }
+
+
+def _mlstm_qkv(p, cfg, xm):
+    B, S, Dm = xm.shape
+    H = cfg.n_heads
+    hd = Dm // H
+    q = (xm @ p["wq"]).reshape(B, S, H, hd) / np.sqrt(hd)
+    k = (xm @ p["wk"]).reshape(B, S, H, hd)
+    v = (xm @ p["wv"]).reshape(B, S, H, hd)
+    xf = xm.astype(jnp.float32)
+    la = jax.nn.log_sigmoid(xf @ p["wf"] + p["fbias"])       # (B,S,H) ≤ 0
+    ig = jnp.clip(xf @ p["wi"], -1e30, IGATE_CLAMP)
+    k = k * jnp.exp(ig)[..., None].astype(k.dtype)           # fold input gate
+    return q, k, v, la
+
+
+def mlstm_block(p: Params, cfg: ModelConfig, x, chunk: int = 256):
+    B, S, D = x.shape
+    up = x @ p["up"]
+    Dm = up.shape[-1] // 2
+    xm, z = up[..., :Dm], up[..., Dm:]
+    q, k, v, la = _mlstm_qkv(p, cfg, xm)
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    y_aug, _ = gla_chunked(q, k, jnp.concatenate([v, ones], -1), la,
+                           chunk=min(chunk, S))
+    y, norm = y_aug[..., :-1], y_aug[..., -1:]
+    h = y / jnp.maximum(jnp.abs(norm), 1.0).astype(y.dtype)
+    h = h.reshape(B, S, Dm)
+    h = rmsnorm(p["norm"], h, cfg.norm_eps) * jax.nn.silu(z)
+    return (h @ p["down"]).astype(x.dtype)
+
+
+def mlstm_cache_init(cfg: ModelConfig, batch: int):
+    Dm = int(MLSTM_PROJ * cfg.d_model)
+    H = cfg.n_heads
+    hd = Dm // H
+    return {"state": jnp.zeros((batch, H, hd, hd + 1), jnp.float32)}
+
+
+def mlstm_decode_step(p: Params, cfg: ModelConfig, x, cache):
+    B = x.shape[0]
+    up = x @ p["up"]
+    Dm = up.shape[-1] // 2
+    xm, z = up[..., :Dm], up[..., Dm:]
+    q, k, v, la = _mlstm_qkv(p, cfg, xm)
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    y_aug, st = gla_decode_step(cache["state"], q[:, 0], k[:, 0],
+                                jnp.concatenate([v, ones], -1)[:, 0], la[:, 0])
+    y, norm = y_aug[..., :-1], y_aug[..., -1:]
+    h = (y / jnp.maximum(jnp.abs(norm), 1.0).astype(y.dtype))
+    h = h.reshape(B, 1, Dm)
+    h = rmsnorm(p["norm"], h, cfg.norm_eps) * jax.nn.silu(z)
+    return (h @ p["down"]).astype(x.dtype), {"state": st}
+
+
+# ----------------------------------------------------------------------------
+# sLSTM
+# ----------------------------------------------------------------------------
+
+def _round128(n: int) -> int:
+    return max(128, (n // 128) * 128)
+
+
+def slstm_init(key, cfg: ModelConfig) -> Params:
+    D = cfg.d_model
+    H = cfg.n_heads
+    hd = D // H
+    ks = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    Dff = _round128(int(SLSTM_PROJ * D))   # TP-width divisible (4/3·D rounded)
+    return {
+        # i, f, z, o gates from input and recurrent h
+        "wx": _init(ks[0], (D, 4 * D), dtype=dt),
+        "wh": _init(ks[1], (D, 4 * D), dtype=dt),
+        "bias": jnp.concatenate([jnp.zeros((D,)), jnp.full((D,), 3.0),
+                                 jnp.zeros((2 * D,))]).astype(jnp.float32),
+        "norm": rmsnorm_init(D),
+        "ff_up": _init(ks[2], (D, Dff), dtype=dt),
+        "ff_down": _init(jax.random.fold_in(ks[2], 1), (Dff, D), dtype=dt),
+    }
+
+
+def _slstm_cell(p, cfg, xt, state):
+    """xt: (B, D); state: (h, c, n, m) each (B, D) — stabilized exp gating."""
+    h, c, n, m = state
+    D = xt.shape[-1]
+    g = (xt @ p["wx"]).astype(jnp.float32) + (h.astype(xt.dtype) @ p["wh"]) \
+        .astype(jnp.float32) + p["bias"]
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(logf + m, gi)                    # stabilizer
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(logf + m - m_new)
+    c = f * c + i * jnp.tanh(gz)
+    n = f * n + i
+    h_new = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1.0)
+    return h_new, c, n, m_new
+
+
+def slstm_block(p: Params, cfg: ModelConfig, x):
+    B, S, D = x.shape
+
+    def step(state, xt):
+        h, c, n, m = _slstm_cell(p, cfg, xt, state)
+        return (h, c, n, m), h
+
+    z0 = tuple(jnp.zeros((B, D), jnp.float32) for _ in range(4))
+    _, hs = jax.lax.scan(step, z0, jnp.moveaxis(x, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    h = rmsnorm(p["norm"], h, cfg.norm_eps)
+    return (jax.nn.gelu(h @ p["ff_up"]) @ p["ff_down"]).astype(x.dtype)
+
+
+def slstm_cache_init(cfg: ModelConfig, batch: int):
+    D = cfg.d_model
+    return {"state": tuple(jnp.zeros((batch, D), jnp.float32) for _ in range(4))}
+
+
+def slstm_decode_step(p: Params, cfg: ModelConfig, x, cache):
+    h, c, n, m = _slstm_cell(p, cfg, x[:, 0], cache["state"])
+    hh = rmsnorm(p["norm"], h[:, None].astype(x.dtype), cfg.norm_eps)
+    ff = (jax.nn.gelu(hh @ p["ff_up"]) @ p["ff_down"]).astype(x.dtype)
+    return ff, {"state": (h, c, n, m)}

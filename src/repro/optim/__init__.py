@@ -1,0 +1,13 @@
+"""Optimizer substrate: AdamW (built here — no optax dependency), gradient
+clipping, LR schedules, and error-feedback int8 gradient compression for the
+cross-pod all-reduce (distributed-optimization trick for 1000+ node DP)."""
+from .adamw import AdamState, adamw_init, adamw_update, clip_by_global_norm
+from .compress import (compress_grads_int8, decompress_grads_int8,
+                       residuals_init)
+from .schedule import cosine_schedule, linear_warmup
+
+__all__ = [
+    "AdamState", "adamw_init", "adamw_update", "clip_by_global_norm",
+    "cosine_schedule", "linear_warmup",
+    "compress_grads_int8", "decompress_grads_int8", "residuals_init",
+]

@@ -1,0 +1,37 @@
+"""Error-feedback int8 gradient compression for the cross-pod all-reduce.
+
+At 1000+ nodes the pod-to-pod (DCN) gradient all-reduce dominates; int8
+quantization with per-tensor scales cuts its bytes 4× vs f32 (2× vs bf16),
+and error feedback (residual carried to the next step) keeps convergence —
+the standard deep-gradient-compression recipe.  The quantize/dequantize pair
+wraps the all-reduce; the residual state lives alongside the optimizer state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_grads_int8(grads, residuals):
+    """→ (int8 tree, scales tree, new residual carry)."""
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        new_r = gf - q.astype(jnp.float32) * scale
+        return q, scale, new_r
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residuals)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]),
+            tdef.unflatten([o[2] for o in out]))
+
+
+def decompress_grads_int8(q_tree, scales):
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, q_tree, scales)
+
+
+def residuals_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,17 @@
+"""LR schedules as pure functions of the (traced) step."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, base_lr: float, warmup_steps: int):
+    return base_lr * jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+
+
+def cosine_schedule(step, base_lr: float, warmup_steps: int, total_steps: int,
+                    min_ratio: float = 0.1):
+    warm = linear_warmup(step, base_lr, warmup_steps)
+    frac = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                    0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup_steps, warm, base_lr * cos)

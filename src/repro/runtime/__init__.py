@@ -1,0 +1,5 @@
+"""Fault-tolerant step driver: checkpoint/restart, NaN quarantine, straggler
+watchdog, preemption-signal emergency save, elastic remesh hooks."""
+from .driver import DriverConfig, StepDriver
+
+__all__ = ["DriverConfig", "StepDriver"]

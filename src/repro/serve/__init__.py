@@ -1,0 +1,5 @@
+"""Serving substrate: batched prefill + decode engine over the per-family
+caches (linear KV, sliding-window ring, SSD/mLSTM/sLSTM states)."""
+from .engine import ServeEngine
+
+__all__ = ["ServeEngine"]

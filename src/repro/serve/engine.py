@@ -1,0 +1,100 @@
+"""Batched serving engine: continuous-batching-lite over the family caches.
+
+Requests join a fixed-size slot table; each engine step decodes one token for
+every active slot (one jitted decode_step over the whole batch).  Finished or
+empty slots are refilled from the queue with a per-slot prefill.  Slot state
+(positions, done flags) is host-side; model caches live on device.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import registry
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (P,) int32
+    max_new_tokens: int
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, batch_slots: int,
+                 max_seq: int, eos_id: int = 0):
+        assert cfg.family != "audio", "use encdec-specific engine for audio"
+        from repro.models import transformer as T
+        self.T = T
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.cache = T.init_cache(cfg, batch_slots, max_seq)
+        self.slot_req: list[Request | None] = [None] * batch_slots
+        self.slot_pos = np.zeros(batch_slots, dtype=np.int64)
+        self.queue: list[Request] = []
+        self._decode = jax.jit(
+            lambda p, t, c, pos: T.decode_step(p, cfg, t, c, pos))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _prefill_slot(self, slot: int, req: Request):
+        """Feed the prompt token-by-token through decode_step (cache-filling
+        prefill; a production engine fuses this into a chunked prefill)."""
+        for i, tok in enumerate(req.prompt):
+            tvec = np.full((self.slots, 1), 0, np.int32)
+            tvec[slot, 0] = tok
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(tvec), self.cache, jnp.int32(i))
+        self.slot_pos[slot] = len(req.prompt)
+        nxt = int(np.argmax(np.asarray(logits)[slot, 0]))
+        req.generated.append(nxt)
+
+    def step(self) -> int:
+        """One engine iteration; returns number of active slots."""
+        # refill free slots
+        for s in range(self.slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[s] = req
+                self._prefill_slot(s, req)
+        active = [s for s in range(self.slots) if self.slot_req[s] is not None]
+        if not active:
+            return 0
+        # batched single-token decode (slots advance at their own positions;
+        # we use the max position — per-slot positions are kept in the cache's
+        # slot_pos validity tracking)
+        tok = np.zeros((self.slots, 1), np.int32)
+        for s in active:
+            tok[s, 0] = self.slot_req[s].generated[-1]
+        pos = int(self.slot_pos[active].max())
+        logits, self.cache = self._decode(self.params, jnp.asarray(tok),
+                                          self.cache, jnp.int32(pos))
+        lg = np.asarray(logits)
+        for s in active:
+            req = self.slot_req[s]
+            nxt = int(np.argmax(lg[s, 0]))
+            req.generated.append(nxt)
+            self.slot_pos[s] += 1
+            if (nxt == self.eos_id
+                    or len(req.generated) >= req.max_new_tokens):
+                req.done = True
+                self.slot_req[s] = None
+        return len(active)
+
+    def run_until_drained(self, max_iters: int = 10_000):
+        done = []
+        for _ in range(max_iters):
+            n = self.step()
+            if n == 0 and not self.queue:
+                break
+        return done

@@ -1,0 +1,5 @@
+"""Training substrate: jit/pjit train step with remat + microbatch gradient
+accumulation, loss/grad-norm metrics, optional int8-compressed DP all-reduce."""
+from .step import TrainStepConfig, make_train_step
+
+__all__ = ["TrainStepConfig", "make_train_step"]

@@ -1,0 +1,8 @@
+"""Paper workloads (§VI-B): Boot, ResNet-20, Sort, HELR.
+
+Boot and HELR execute for real at test scale (tests/, examples/); all four
+also have *virtual* trace generators that replay the exact HE-op control flow
+at paper-scale parameters (N=2^16, L=48) recording primitive-function counts
+— the input the NoP/compute cost model consumes (the analogue of the paper's
+simulator input).
+"""

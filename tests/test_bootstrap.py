@@ -1,0 +1,73 @@
+"""Full CKKS bootstrapping at test scale (paper §VI-B Boot workload).
+
+Slow (~2-4 min): one complete ModRaise → CtS → EvalMod → StC pipeline with
+minimum key-switching, checked for precision and level refresh."""
+import numpy as np
+import pytest
+
+from repro.core import bootstrap as B, ckks, encoding as enc, keys as K
+from repro.core import params as prm, trace
+
+
+@pytest.mark.slow
+def test_bootstrap_end_to_end():
+    p = prm.make_params(N=1 << 9, L=14, K=2, dnum=7)
+    ctx = B.setup_bootstrap(p, hamming=8, K_range=4, cheb_deg=47,
+                            use_min_ks=True)
+    rng = np.random.default_rng(0)
+    z = rng.normal(size=p.slots) * 0.05
+    scale = float(p.q[0])
+    pt = enc.encode(z, scale, p.q[:1], p.N)
+    ct = K.encrypt(pt, scale, ctx.keys.sk, p.q[:1], p.N)
+    assert ct.level == 1
+    with trace.trace_ops() as t:
+        out = B.bootstrap(ct, ctx)
+    assert out.level >= 3, "bootstrap must refresh usable levels"
+    got = enc.decode(K.decrypt(out, ctx.keys.sk), out.scale, out.basis,
+                     p.N, p.slots)
+    err = np.max(np.abs(got - z))
+    assert err < 5e-3, f"bootstrap precision {err}"
+    # the paper's premise on the op mix: NTT/BConv dominated
+    s = t.summary()
+    assert s["he_ops"]["KS"] > 50
+    assert s["butterflies"] > 0 and s["bconv_macs"] > 0
+
+
+@pytest.mark.slow
+def test_min_ks_uses_single_giant_key():
+    """§V-B: with min-KS the giant steps need only evk_bs — key count drops."""
+    p = prm.make_params(N=1 << 9, L=14, K=2, dnum=7)
+    ctx_min = B.setup_bootstrap(p, use_min_ks=True)
+    ctx_full = B.setup_bootstrap(p, use_min_ks=False)
+    assert len(ctx_min.keys.galois) < len(ctx_full.keys.galois)
+
+
+def test_monomial_multiplication_exact():
+    """ckks.mul_monomial(N/2) multiplies every slot by exactly i (free)."""
+    p = prm.test_small()
+    ks = K.keygen(p, seed=3)
+    rng = np.random.default_rng(4)
+    z = rng.normal(size=16) + 1j * rng.normal(size=16)
+    scale = float(p.q[-1])
+    ct = K.encrypt(enc.encode(z, scale, p.q, p.N), scale, ks.sk, p.q, p.N)
+    out = ckks.mul_monomial(ct, p.N // 2)
+    got = enc.decode(K.decrypt(out, ks.sk), out.scale, out.basis, p.N, 16)
+    np.testing.assert_allclose(got, 1j * z, atol=1e-4)
+    # −i via 3N/2
+    out2 = ckks.mul_monomial(ct, 3 * p.N // 2)
+    got2 = enc.decode(K.decrypt(out2, ks.sk), out2.scale, out2.basis, p.N, 16)
+    np.testing.assert_allclose(got2, -1j * z, atol=1e-4)
+
+
+def test_match_scale_correction():
+    p = prm.test_small()
+    ks = K.keygen(p, seed=5)
+    rng = np.random.default_rng(6)
+    z = rng.normal(size=8)
+    scale = float(p.q[-1])
+    ct = K.encrypt(enc.encode(z, scale, p.q, p.N), scale, ks.sk, p.q, p.N)
+    target = scale * 1.0012      # typical prime-chain drift
+    out = ckks.match_scale(ct, target, p)
+    assert abs(out.scale - target) / target < 1e-6
+    got = enc.decode(K.decrypt(out, ks.sk), out.scale, out.basis, p.N, 8)
+    np.testing.assert_allclose(got, z, atol=1e-4)

@@ -1,0 +1,172 @@
+"""End-to-end CKKS scheme tests: every primitive HE op decrypts to the right
+message (paper §II-B), including the paper's double-prime rescaling (§III-C),
+hybrid key-switching, hoisted rotations, and minimum-KS progressions (§V-B)."""
+import numpy as np
+import pytest
+
+from repro.core import bconv as bc
+from repro.core import ckks, encoding as enc, keys as K, params as prm, poly as pl
+
+import jax.numpy as jnp
+
+
+@pytest.fixture(scope="module")
+def setup():
+    p = prm.test_small()
+    ks = K.keygen(p, rotations=(1, 2, 3, 4), conj=True, seed=1)
+    return p, ks
+
+
+def enc_msg(p, ks, z, scale=None):
+    scale = scale or float(p.q[-1])
+    pt = enc.encode(z, scale, p.q, p.N)
+    return K.encrypt(pt, scale, ks.sk, p.q, p.N)
+
+
+def dec_msg(p, ks, ct, num):
+    return enc.decode(K.decrypt(ct, ks.sk), ct.scale, ct.basis, p.N, num)
+
+
+def test_encrypt_decrypt(setup):
+    p, ks = setup
+    rng = np.random.default_rng(0)
+    z = rng.normal(size=p.slots) + 1j * rng.normal(size=p.slots)
+    got = dec_msg(p, ks, enc_msg(p, ks, z), p.slots)
+    assert np.max(np.abs(got - z)) < 1e-4
+
+
+def test_hadd_hsub(setup):
+    p, ks = setup
+    rng = np.random.default_rng(1)
+    z1 = rng.normal(size=32) + 1j * rng.normal(size=32)
+    z2 = rng.normal(size=32) + 1j * rng.normal(size=32)
+    c1, c2 = enc_msg(p, ks, z1), enc_msg(p, ks, z2)
+    assert np.max(np.abs(dec_msg(p, ks, ckks.hadd(c1, c2), 32) - (z1 + z2))) < 1e-4
+    assert np.max(np.abs(dec_msg(p, ks, ckks.hsub(c1, c2), 32) - (z1 - z2))) < 1e-4
+
+
+def test_pmult_rescale(setup):
+    p, ks = setup
+    rng = np.random.default_rng(2)
+    z1 = rng.normal(size=32)
+    z2 = rng.normal(size=32)
+    scale = float(p.q[-1])
+    c1 = enc_msg(p, ks, z1)
+    pt2 = pl.RnsPoly(enc.encode(z2, scale, p.q, p.N), p.q, pl.COEFF)
+    out = ckks.rescale(ckks.pmult(c1, pt2, scale), p, times=1)
+    assert out.level == p.L - 1
+    assert np.max(np.abs(dec_msg(p, ks, out, 32) - z1 * z2)) < 1e-3
+
+
+def test_hmult_relinearize(setup):
+    p, ks = setup
+    rng = np.random.default_rng(3)
+    z1 = rng.normal(size=32) + 1j * rng.normal(size=32)
+    z2 = rng.normal(size=32) + 1j * rng.normal(size=32)
+    out = ckks.rescale(ckks.hmult(enc_msg(p, ks, z1), enc_msg(p, ks, z2), ks),
+                       p, times=1)
+    assert np.max(np.abs(dec_msg(p, ks, out, 32) - z1 * z2)) < 1e-3
+
+
+def test_hrot_all_amounts(setup):
+    p, ks = setup
+    rng = np.random.default_rng(4)
+    z = rng.normal(size=p.slots)
+    ct = enc_msg(p, ks, z)
+    for r in (1, 2, 4):
+        got = dec_msg(p, ks, ckks.hrot(ct, r, ks), p.slots)
+        assert np.max(np.abs(got - np.roll(z, -r))) < 1e-3, f"r={r}"
+
+
+def test_conjugate(setup):
+    p, ks = setup
+    rng = np.random.default_rng(5)
+    z = rng.normal(size=16) + 1j * rng.normal(size=16)
+    got = dec_msg(p, ks, ckks.conjugate(enc_msg(p, ks, z), ks), 16)
+    assert np.max(np.abs(got - np.conj(z))) < 1e-3
+
+
+def test_hoisted_rotations_match_plain(setup):
+    """Hoisted (shared-ModUp) rotations must agree with independent HRots."""
+    p, ks = setup
+    rng = np.random.default_rng(6)
+    z = rng.normal(size=p.slots)
+    ct = enc_msg(p, ks, z)
+    hoisted = ckks.hrot_hoisted(ct, [1, 2, 3], ks)
+    for r, ch in zip([1, 2, 3], hoisted):
+        got = dec_msg(p, ks, ch, p.slots)
+        assert np.max(np.abs(got - np.roll(z, -r))) < 1e-3, f"r={r}"
+
+
+def test_min_ks_progression(setup):
+    """§V-B minimum key-switching: an arithmetic progression of rotations
+    computed recursively with the single evk of the common difference."""
+    p, ks = setup
+    rng = np.random.default_rng(7)
+    z = rng.normal(size=p.slots)
+    ct = enc_msg(p, ks, z)
+    rots = ckks.hrot_by_progression(ct, step=2, count=3, keys=ks)
+    for j, cr in enumerate(rots, start=1):
+        got = dec_msg(p, ks, cr, p.slots)
+        assert np.max(np.abs(got - np.roll(z, -2 * j))) < 5e-3, f"j={j}"
+
+
+def test_double_prime_rescale():
+    """Paper §III-C: 32-bit words + two-prime rescale keep a 2⁶⁰ scale."""
+    p = prm.test_medium()
+    ks = K.keygen(p, seed=2)
+    rng = np.random.default_rng(8)
+    z1 = rng.normal(size=32) * 0.5
+    z2 = rng.normal(size=32) * 0.5
+    scale = float(p.q[-1]) * float(p.q[-2])
+    c1 = K.encrypt(enc.encode(z1, scale, p.q, p.N), scale, ks.sk, p.q, p.N)
+    c2 = K.encrypt(enc.encode(z2, scale, p.q, p.N), scale, ks.sk, p.q, p.N)
+    out = ckks.rescale(ckks.hmult(c1, c2, ks), p)  # ÷ q_{L-1}·q_L
+    assert out.level == p.L - 2
+    assert abs(np.log2(out.scale) - 60) < 2.5
+    got = enc.decode(K.decrypt(out, ks.sk), out.scale, out.basis, p.N, 32)
+    assert np.max(np.abs(got - z1 * z2)) < 1e-6  # high precision retained
+
+
+def test_depth_chain(setup):
+    """Repeated square→rescale down the level chain stays accurate."""
+    p, ks = setup
+    rng = np.random.default_rng(9)
+    z = (rng.normal(size=16) * 0.3).astype(np.complex128)
+    ct = enc_msg(p, ks, z)
+    cur = z
+    for _ in range(3):
+        ct = ckks.rescale(ckks.square(ct, ks), p, times=1)
+        cur = cur * cur
+        got = dec_msg(p, ks, ct, 16)
+        assert np.max(np.abs(got - cur)) < 5e-2
+
+
+def test_bconv_approximate_identity():
+    """BConv result equals the exact CRT lift up to the documented +u·Q slack."""
+    N = 256
+    p = prm.make_params(N=N, L=3, K=2, dnum=3)
+    rng = np.random.default_rng(10)
+    # small signed values: exact conversion expected (u = 0 for |v| ≪ Q)
+    v = rng.integers(-1000, 1000, N, dtype=np.int64)
+    x = pl.RnsPoly(jnp.asarray(pl.small_to_rns(v, p.q)), p.q, pl.COEFF)
+    got = np.asarray(bc.bconv(x, p.p).data)
+    Q = int(np.prod([int(qi) for qi in p.q], dtype=object))
+    for j, pj in enumerate(p.p):
+        ref = v % pj
+        diff = (got[j].astype(np.int64) - ref) % pj
+        # slack must be a small multiple of Q mod p_j
+        ok = np.zeros(N, dtype=bool)
+        for u in range(-2, 3):
+            ok |= diff == (u * Q) % pj
+        assert ok.all(), f"BConv slack exceeded at dst prime {j}"
+
+
+def test_level_drop(setup):
+    p, ks = setup
+    rng = np.random.default_rng(11)
+    z = rng.normal(size=16)
+    ct = ckks.level_drop(enc_msg(p, ks, z), 3)
+    assert ct.level == 3
+    got = dec_msg(p, ks, ct, 16)
+    assert np.max(np.abs(got - z)) < 1e-4

@@ -1,0 +1,79 @@
+"""Distributed (multi-fake-device) tests, run via subprocess so the parent
+process keeps a single CPU device.  Validates the paper's §IV/§V machinery:
+cluster-mapped NTT (both dataflows), BConv (ARK vs limb duplication), and the
+traffic claims (limb-dup removes output redistribution; the single-exchange
+four-step halves NTT traffic)."""
+import pytest
+
+from repro.core.mapping import ClusterMap, all_cluster_maps, default_block
+from repro.core.distributed import limbdup_beneficial
+from repro.launch.subproc import run_with_devices
+
+
+@pytest.mark.slow
+def test_distributed_correctness_8dev():
+    out = run_with_devices(8, "repro.core._dist_selftest", "8", "correctness")
+    assert out["ok"] is True
+
+
+@pytest.mark.slow
+def test_traffic_limbdup_vs_ark_and_fourstep():
+    """Fig. 7 from compiled HLO at the ModUp shape (ℓ=12 → K=48): limb
+    duplication must be gather-only and land in the paper's 18-22 % band."""
+    out = run_with_devices(8, "repro.core._dist_selftest", "8", "traffic",
+                           "12", "48", "2048")
+    ark = out["bconv_ark"]["total"]
+    dup = out["bconv_limbdup"]["total"]
+    assert "all-to-all" not in out["bconv_limbdup"]
+    assert out["eq3_beneficial"] is True
+    cut = 100 * (1 - dup / ark)
+    assert 15 <= cut <= 25, cut           # paper Fig. 7: 18-22 %
+    # single-exchange four-step NTT halves the baseline's two all-to-alls
+    base = out["ntt_baseline"]["total"]
+    four = out["ntt_fourstep"]["total"]
+    assert four <= 0.55 * base, (four, base)
+
+
+def test_cluster_map_structure():
+    cm = ClusterMap(8, 8, 4, 4)
+    assert cm.n_limb_clusters == 4
+    assert cm.block_size == 16
+    assert cm.coef_cluster_size == 4
+    assert cm.name == "8x8-BK-4x4"
+    assert ClusterMap.parse("8x8-BK-4x4") == cm
+    dw = ClusterMap.parse("4x4-DW")
+    assert dw.bh == 4 and dw.bw == 1
+    ls = ClusterMap.parse("4x4-limb-scatter")
+    assert ls.block_size == 1 and ls.n_limb_clusters == 16
+    cs = ClusterMap.parse("4x4-coef-scatter")
+    assert cs.block_size == 16 and cs.n_limb_clusters == 1
+
+
+def test_cluster_map_hop_geometry():
+    """Block clustering keeps limb-cluster members adjacent (fewer hops than
+    the strided coefficient clusters) — the §IV-C locality argument."""
+    cm = ClusterMap(8, 8, 2, 2)
+    assert cm.limb_cluster_hops() < cm.coef_cluster_hops()
+    # coefficient-cluster members are one per block, stride = block size
+    members = cm.coef_cluster_members(0)
+    assert len(members) == cm.n_limb_clusters
+    assert members[0] == (0, 0) and members[1] == (0, 2)
+
+
+def test_default_block_is_paper_default():
+    cm = default_block(8, 8)
+    assert (cm.bh, cm.bw) == (4, 4)  # §VI-F: d_x/2 × d_y/2
+
+
+def test_all_cluster_maps_capped():
+    maps = all_cluster_maps(8, 8, max_limb_clusters=8)
+    assert all(m.n_limb_clusters <= 8 for m in maps)
+    assert any(m.name == "8x8-BK-4x4" for m in maps)
+
+
+def test_eq3_condition():
+    """Paper Eq. 3 sanity: big coefficient clusters make broadcasting lose."""
+    small = ClusterMap(4, 4, 2, 2)   # coef cluster size 4
+    big = ClusterMap(8, 8, 2, 1)     # coef cluster size 32
+    assert limbdup_beneficial(n_in_limbs=12, n_out_limbs=48, cm=small)
+    assert not limbdup_beneficial(n_in_limbs=12, n_out_limbs=48, cm=big)

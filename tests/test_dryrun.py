@@ -1,0 +1,53 @@
+"""Dry-run machinery tests: the HLO collective parser on known programs, and
+one real (cheap) dry-run cell through the 512-device subprocess path."""
+import json
+
+import pytest
+
+from repro.launch import hlo
+from repro.launch.subproc import run_with_devices
+
+
+def test_hlo_parser_formulas():
+    text = """
+  %all-gather = f32[8,128]{1,0} all-gather(%p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  %all-reduce = f32[2,128]{1,0} all-reduce(%p1), replica_groups={{0,1,2,3}}, to_apply=%add
+  %reduce-scatter = f32[2,32]{1,0} reduce-scatter(%p2), replica_groups={{0,1}}, dimensions={1}
+  %all-to-all = (u32[1,16]{1,0}, u32[1,16]{1,0}) all-to-all(%a, %b), replica_groups={{0,1}}
+  %collective-permute = bf16[4,4]{1,0} collective-permute(%c), source_target_pairs={{0,1}}
+"""
+    colls = hlo.parse_collectives(text)
+    kinds = {c.kind: c for c in colls}
+    assert set(kinds) == {"all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute"}
+    ag = kinds["all-gather"]
+    assert ag.out_bytes == 8 * 128 * 4 and ag.group_size == 4
+    assert ag.wire_bytes == pytest.approx(8 * 128 * 4 * 3 / 4)
+    ar = kinds["all-reduce"]
+    assert ar.wire_bytes == pytest.approx(2 * (2 * 128 * 4) * 3 / 4)
+    rs = kinds["reduce-scatter"]
+    assert rs.in_bytes == 2 * 32 * 4 * 2          # derived: out·g
+    a2a = kinds["all-to-all"]
+    assert a2a.out_bytes == 2 * 16 * 4            # tuple output summed
+    cp = kinds["collective-permute"]
+    assert cp.wire_bytes == 4 * 4 * 2
+
+
+def test_hlo_parser_ignores_noncollectives():
+    text = "%add = f32[8]{0} add(%x, %y)\n%fusion = f32[8]{0} fusion(%z)"
+    assert hlo.parse_collectives(text) == []
+
+
+@pytest.mark.slow
+def test_dryrun_cell_subprocess(tmp_path):
+    """One full dry-run cell on the 512-device production mesh (cheapest
+    cell: xlstm decode; asserts compile success + analyses present)."""
+    out = run_with_devices(
+        512, "repro.launch.dryrun", "--arch", "xlstm_1_3b",
+        "--shape", "decode_32k", "--mesh", "pod", "--out", str(tmp_path),
+        "--no-scale-metrics", timeout=900, expect_json=False)
+    rec = json.load(open(tmp_path / "xlstm_1_3b__decode_32k__pod.json"))
+    assert rec["ok"], rec.get("error")
+    assert rec["flops"] > 0
+    assert rec["memory"]["temp_bytes"] < 16 * 2**30   # fits HBM
+    assert "collectives" in rec

@@ -1,0 +1,47 @@
+"""Canonical-embedding encoding: special FFT vs direct matrix, roundtrips."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encoding as enc, rns
+
+
+@pytest.mark.parametrize("N", [16, 64, 256, 1024])
+def test_special_fft_matches_matrix(N):
+    rng = np.random.default_rng(N)
+    c = rng.normal(size=N // 2) + 1j * rng.normal(size=N // 2)
+    fast = enc.embed(c, N)
+    direct = enc.embed(c, N, direct=True)
+    np.testing.assert_allclose(fast, direct, rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(logN=st.integers(3, 10), seed=st.integers(0, 2**31))
+def test_fft_roundtrip(logN, seed):
+    N = 1 << logN
+    rng = np.random.default_rng(seed)
+    z = rng.normal(size=N // 2) + 1j * rng.normal(size=N // 2)
+    np.testing.assert_allclose(enc.embed(enc.embed_inv(z, N), N), z,
+                               rtol=1e-8, atol=1e-8)
+
+
+@pytest.mark.parametrize("scale_bits", [29, 40, 59])
+def test_encode_decode_roundtrip(scale_bits):
+    N = 1 << 10
+    basis = tuple(rns.gen_ntt_primes(4, N))
+    rng = np.random.default_rng(scale_bits)
+    z = rng.normal(size=N // 2) + 1j * rng.normal(size=N // 2)
+    pt = enc.encode(z, 2.0 ** scale_bits, basis, N)
+    back = enc.decode(pt, 2.0 ** scale_bits, basis, N)
+    # rounding error ~ N/Δ; at Δ=2²⁹ that is ~2e-6
+    tol = max(1e-12, 64 * N / 2.0 ** scale_bits)
+    np.testing.assert_allclose(back, z, atol=tol)
+
+
+def test_encode_partial_message():
+    N = 1 << 8
+    basis = tuple(rns.gen_ntt_primes(3, N))
+    z = np.arange(5) + 1j
+    pt = enc.encode(z, 2.0 ** 40, basis, N)
+    back = enc.decode(pt, 2.0 ** 40, basis, N, num=5)
+    np.testing.assert_allclose(back, z, atol=1e-6)

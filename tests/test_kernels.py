@@ -1,0 +1,145 @@
+"""Per-kernel validation: Pallas (interpret=True) vs independent numpy-int64
+oracles, swept over shapes, bases, and the recomposable-NTTU R parameter.
+Modular arithmetic is exact → exact equality asserted throughout."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import poly as pl_core, rns
+from repro.kernels.automorphism import ops as auto_ops, ref as auto_ref
+from repro.kernels.bconv import ops as bconv_ops, ref as bconv_ref
+from repro.kernels.eltwise import ops as elt_ops, ref as elt_ref
+from repro.kernels.ntt import ops as ntt_ops, ref as ntt_ref
+
+
+def rand(basis, N, P=1, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.stack([
+        np.stack([rng.integers(0, q, N, dtype=np.int64).astype(np.uint32)
+                  for q in basis]) for _ in range(P)])
+
+
+# ---------------------------------------------------------------- NTT kernel
+
+@pytest.mark.parametrize("N", [32, 128, 512])
+@pytest.mark.parametrize("ell", [1, 3])
+def test_ntt_kernel_shapes(N, ell):
+    basis = tuple(rns.gen_ntt_primes(ell, N))
+    x = rand(basis, N, P=2, seed=N + ell)
+    want = ntt_ref.ntt_ref(x, basis)
+    got = np.asarray(ntt_ops.ntt_fwd(jnp.asarray(x), basis))
+    np.testing.assert_array_equal(got, want)
+    back = np.asarray(ntt_ops.ntt_inv(jnp.asarray(got), basis))
+    np.testing.assert_array_equal(back, x)
+
+
+@pytest.mark.parametrize("R", [2, 4, 8, 16, 32, 64])
+def test_ntt_kernel_recomposable_R(R):
+    """Paper §III-B: every submodule recomposition computes the same NTT."""
+    N = 128
+    basis = tuple(rns.gen_ntt_primes(2, N))
+    x = rand(basis, N, P=1, seed=R)
+    want = ntt_ref.ntt_ref(x, basis)
+    got = np.asarray(ntt_ops.ntt_fwd(jnp.asarray(x), basis, R=R))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=8, deadline=None)
+@given(logN=st.integers(4, 9), seed=st.integers(0, 2**31))
+def test_ntt_kernel_property(logN, seed):
+    N = 1 << logN
+    basis = tuple(rns.gen_ntt_primes(1, N))
+    x = rand(basis, N, P=1, seed=seed)
+    want = ntt_ref.ntt_ref(x, basis)
+    got = np.asarray(ntt_ops.ntt_fwd(jnp.asarray(x), basis))
+    np.testing.assert_array_equal(got, want)
+
+
+# -------------------------------------------------------------- BConv kernel
+
+@pytest.mark.parametrize("ell,K", [(2, 2), (4, 3), (6, 12), (8, 4)])
+@pytest.mark.parametrize("N", [256, 2048])
+def test_bconv_kernel_vs_ref(ell, K, N):
+    dst = tuple(rns.gen_ntt_primes(K, N))
+    src = tuple(rns.gen_ntt_primes(ell, N, exclude=dst))
+    x = rand(src, N, seed=ell * K)[0]
+    want = bconv_ref.bconv_ref(x, src, dst)
+    got = np.asarray(bconv_ops.bconv(jnp.asarray(x), src, dst, tile=256))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_bconv_kernel_tile_invariance():
+    N = 1024
+    dst = tuple(rns.gen_ntt_primes(3, N))
+    src = tuple(rns.gen_ntt_primes(4, N, exclude=dst))
+    x = rand(src, N, seed=5)[0]
+    outs = [np.asarray(bconv_ops.bconv(jnp.asarray(x), src, dst, tile=t))
+            for t in (128, 256, 1024)]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(o, outs[0])
+
+
+# ------------------------------------------------------------ eltwise kernel
+
+@pytest.mark.parametrize("op,n_in", [("mul", 2), ("add", 2), ("sub", 2),
+                                     ("mac", 4), ("muladd", 3)])
+def test_eltwise_kernel_ops(op, n_in):
+    N, ell = 512, 3
+    basis = tuple(rns.gen_ntt_primes(ell, N))
+    arrays = [rand(basis, N, seed=10 + i)[0] for i in range(n_in)]
+    want = elt_ref.eltwise_ref(op, basis, *arrays)
+    got = np.asarray(elt_ops.eltwise(op, basis, *map(jnp.asarray, arrays)))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=8, deadline=None)
+@given(logN=st.integers(7, 11), ell=st.integers(1, 4), seed=st.integers(0, 2**31))
+def test_eltwise_mul_property(logN, ell, seed):
+    N = 1 << logN
+    basis = tuple(rns.gen_ntt_primes(ell, N))
+    a, b = rand(basis, N, seed=seed)[0], rand(basis, N, seed=seed + 1)[0]
+    want = elt_ref.eltwise_ref("mul", basis, a, b)
+    got = np.asarray(elt_ops.eltwise("mul", basis, jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------- automorphism kernel
+
+@pytest.mark.parametrize("N,r", [(64, 1), (256, 7), (1024, 100)])
+def test_automorphism_kernel_rotation(N, r):
+    basis = tuple(rns.gen_ntt_primes(2, N))
+    x = rand(basis, N, P=2, seed=r)
+    g = pl_core.galois_elt(r, N)
+    perm = pl_core.automorphism_perm(N, g)
+    want = auto_ref.automorphism_ref(x, perm)
+    got = np.asarray(auto_ops.apply_rotation(jnp.asarray(x), N, r))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_automorphism_kernel_conj():
+    N = 128
+    basis = tuple(rns.gen_ntt_primes(1, N))
+    x = rand(basis, N, seed=3)
+    perm = pl_core.automorphism_perm(N, 2 * N - 1)
+    want = auto_ref.automorphism_ref(x, perm)
+    got = np.asarray(auto_ops.apply_galois(jnp.asarray(x), N, 2 * N - 1))
+    np.testing.assert_array_equal(got, want)
+
+
+# ----------------------------------------------- kernel ↔ scheme integration
+
+def test_kernel_pipeline_matches_core_hmult_datapath():
+    """NTT→eltwise-mul→iNTT through the kernels == core poly multiply."""
+    N = 256
+    basis = tuple(rns.gen_ntt_primes(3, N))
+    a = rand(basis, N, seed=20)
+    b = rand(basis, N, seed=21)
+    pa = pl_core.RnsPoly(jnp.asarray(a[0]), basis, pl_core.COEFF).to_ntt()
+    pb = pl_core.RnsPoly(jnp.asarray(b[0]), basis, pl_core.COEFF).to_ntt()
+    want = np.asarray((pa * pb).to_coeff().data)
+    na = ntt_ops.ntt_fwd(jnp.asarray(a), basis)
+    nb = ntt_ops.ntt_fwd(jnp.asarray(b), basis)
+    prod = elt_ops.eltwise("mul", basis, na[0], nb[0])
+    got = np.asarray(ntt_ops.ntt_inv(prod[None], basis))[0]
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,81 @@
+"""Property tests for the u32 modular-arithmetic datapath (paper §III-C).
+
+Every primitive is checked against exact Python-int arithmetic — these are
+the invariants the whole 32-bit CiFHER datapath rests on.
+"""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import modmath as mm, rns
+
+PRIMES = rns.gen_ntt_primes(4, 1 << 10)
+u32s = st.integers(min_value=0, max_value=2**32 - 1)
+
+
+def arr(*vals):
+    return jnp.asarray(np.array(vals, dtype=np.uint32))
+
+
+@settings(max_examples=60, deadline=None)
+@given(a=u32s, b=u32s)
+def test_mul32_wide_exact(a, b):
+    hi, lo = mm.mul32_wide(arr(a), arr(b))
+    got = (int(hi[0]) << 32) | int(lo[0])
+    assert got == a * b
+
+
+@settings(max_examples=60, deadline=None)
+@given(a=u32s, b=u32s, qi=st.integers(0, len(PRIMES) - 1))
+def test_addsub_neg_mod(a, b, qi):
+    q = PRIMES[qi]
+    a, b = a % q, b % q
+    qa = arr(q)
+    assert int(mm.addmod(arr(a), arr(b), qa)[0]) == (a + b) % q
+    assert int(mm.submod(arr(a), arr(b), qa)[0]) == (a - b) % q
+    assert int(mm.negmod(arr(a), qa)[0]) == (-a) % q
+
+
+@settings(max_examples=60, deadline=None)
+@given(x=u32s, w=u32s, qi=st.integers(0, len(PRIMES) - 1))
+def test_mulmod_shoup(x, w, qi):
+    q = PRIMES[qi]
+    x, w = x % q, w % q
+    got = mm.mulmod_shoup(arr(x), arr(w), arr(rns.shoup(w, q)), arr(q))
+    assert int(got[0]) == x * w % q
+
+
+@settings(max_examples=60, deadline=None)
+@given(a=u32s, b=u32s, qi=st.integers(0, len(PRIMES) - 1))
+def test_montgomery_mulmod(a, b, qi):
+    q = PRIMES[qi]
+    t = rns.prime_tables(q, 1 << 10)
+    a, b = a % q, b % q
+    got = mm.mulmod(arr(a), arr(b), arr(q), arr(t.qinv_neg), arr(t.r2))
+    assert int(got[0]) == a * b % q
+
+
+@settings(max_examples=60, deadline=None)
+@given(x=st.integers(0, 2**60 - 1), qi=st.integers(0, len(PRIMES) - 1))
+def test_barrett_reduce_wide(x, qi):
+    q = PRIMES[qi]
+    t = rns.prime_tables(q, 1 << 10)
+    hi, lo = x >> 32, x & 0xFFFFFFFF
+    got = mm.barrett_reduce_wide(arr(hi), arr(lo), arr(q),
+                                 arr(t.mu_hi), arr(t.mu_lo))
+    assert int(got[0]) == x % q
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 200), qi=st.integers(0, len(PRIMES) - 1),
+       seed=st.integers(0, 2**31))
+def test_lazy_sum_mod(n, qi, seed):
+    from repro.core import bconv as bc
+    q = PRIMES[qi]
+    t = rns.prime_tables(q, 1 << 10)
+    rng = np.random.default_rng(seed)
+    terms = rng.integers(0, q, size=(n, 8), dtype=np.int64)
+    got = bc.lazy_sum_mod(jnp.asarray(terms.astype(np.uint32)), arr(q),
+                          arr(t.mu_hi), arr(t.mu_lo), axis=0)
+    ref = terms.sum(axis=0) % q
+    np.testing.assert_array_equal(np.asarray(got), ref.astype(np.uint32))

@@ -1,0 +1,95 @@
+"""NTT correctness: iterative oracle, recomposable four-step (paper §III-B),
+negacyclic convolution, and automorphism permutation identities."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import modmath as mm, ntt as nttm, poly as pl, rns
+
+
+def rand_limbs(basis, N, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.stack([rng.integers(0, q, N, dtype=np.int64).astype(np.uint32)
+                     for q in basis])
+
+
+@pytest.mark.parametrize("N", [16, 64, 256])
+def test_forward_matches_naive(N):
+    basis = tuple(rns.gen_ntt_primes(2, N))
+    c = nttm.stacked_ntt_consts(basis, N)
+    x = rand_limbs(basis, N, seed=N)
+    out = np.asarray(nttm.ntt(jnp.asarray(x), c))
+    for i, q in enumerate(basis):
+        np.testing.assert_array_equal(out[i], nttm.naive_ntt(x[i], q, N))
+
+
+@pytest.mark.parametrize("N", [16, 256, 1024, 4096])
+def test_roundtrip(N):
+    basis = tuple(rns.gen_ntt_primes(3, N))
+    c = nttm.stacked_ntt_consts(basis, N)
+    x = rand_limbs(basis, N, seed=N + 1)
+    back = np.asarray(nttm.intt(nttm.ntt(jnp.asarray(x), c), c))
+    np.testing.assert_array_equal(back, x)
+
+
+@pytest.mark.parametrize("N", [64, 256, 1024])
+def test_four_step_every_split(N):
+    """The recomposable-NTTU property: every R×C split is exact (Fig. 1)."""
+    basis = tuple(rns.gen_ntt_primes(2, N))
+    c = nttm.stacked_ntt_consts(basis, N)
+    x = rand_limbs(basis, N, seed=N + 2)
+    want = np.asarray(nttm.ntt(jnp.asarray(x), c))
+    R = 2
+    while R <= N // 2:
+        fc = nttm.stacked_four_step_consts(basis, N, R)
+        got = np.asarray(nttm.four_step_ntt(jnp.asarray(x), fc))
+        np.testing.assert_array_equal(got, want, err_msg=f"R={R}")
+        back = np.asarray(nttm.four_step_intt(jnp.asarray(got), fc))
+        np.testing.assert_array_equal(back, x, err_msg=f"inv R={R}")
+        R *= 2
+
+
+@settings(max_examples=10, deadline=None)
+@given(logN=st.integers(3, 8), seed=st.integers(0, 2**31))
+def test_negacyclic_convolution_property(logN, seed):
+    """intt(ntt(a)⊙ntt(b)) equals the negacyclic product a·b mod (X^N+1)."""
+    N = 1 << logN
+    basis = tuple(rns.gen_ntt_primes(1, N))
+    q = basis[0]
+    c = nttm.stacked_ntt_consts(basis, N)
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, q, (1, N), dtype=np.int64).astype(np.uint32)
+    b = rng.integers(0, q, (1, N), dtype=np.int64).astype(np.uint32)
+    na, nb = nttm.ntt(jnp.asarray(a), c), nttm.ntt(jnp.asarray(b), c)
+    got = np.asarray(nttm.intt(mm.mulmod(na, nb, c.q, c.qinv_neg, c.r2), c))[0]
+    # exact negacyclic reference via numpy object ints
+    full = np.convolve(a[0].astype(object), b[0].astype(object))
+    ref = full[:N].copy()
+    ref[: N - 1] -= full[N:]
+    ref = np.array([int(v) % q for v in ref], dtype=np.uint32)
+    np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.parametrize("N,g", [(64, 5), (64, 127), (256, 25)])
+def test_automorphism_ntt_vs_coeff(N, g):
+    """NTT-domain permutation == coefficient-domain signed permutation."""
+    basis = tuple(rns.gen_ntt_primes(2, N))
+    c = nttm.stacked_ntt_consts(basis, N)
+    x = rand_limbs(basis, N, seed=g)
+    qv = np.array(basis, dtype=np.uint32)
+    ref_coeff = pl.apply_automorphism_coeff(x, N, g, qv)
+    p = pl.RnsPoly(jnp.asarray(x), basis, pl.COEFF).to_ntt()
+    perm = pl.automorphism_perm(N, g)
+    got = np.asarray(p.automorphism(perm).to_coeff().data)
+    np.testing.assert_array_equal(got, ref_coeff)
+
+
+def test_automorphism_composition():
+    """φ_g ∘ φ_h = φ_{gh mod 2N} as index permutations."""
+    N = 128
+    for g, h in [(5, 25), (3, 7), (5, 2 * N - 1)]:
+        pg = pl.automorphism_perm(N, g)
+        ph = pl.automorphism_perm(N, h)
+        pgh = pl.automorphism_perm(N, g * h % (2 * N))
+        np.testing.assert_array_equal(ph[pg], pgh)
