@@ -35,7 +35,10 @@ def main() -> None:
         sections.append(("Fig. 7 from compiled HLO", bench_limbdup_hlo.main))
     if not args.skip_measured:
         from benchmarks import bench_ntt
-        sections.append(("NTT micro-bench (measured)", bench_ntt.main))
+        # writes the machine-readable BENCH_ntt.json (before/after wall-clock
+        # + ops counts) used to track the perf trajectory across PRs
+        sections.append(("NTT micro-bench (measured)",
+                         lambda: bench_ntt.main(["--quick"])))
 
     for title, fn in sections:
         print(f"\n### {title}")

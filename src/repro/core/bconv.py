@@ -14,6 +14,8 @@ term into hi16/lo16, sum columns in u32 — exact for ℓ < 2¹⁶ — recombine
 """
 from __future__ import annotations
 
+import functools as _functools
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -163,8 +165,13 @@ def mod_down(x: pl.RnsPoly, q_basis: tuple[int, ...],
     xp = pl.RnsPoly(x.data[..., ellq:, :], tuple(p), pl.NTT)
     xp_coeff = xp.to_coeff()
     xp_in_q = bconv(xp_coeff, tuple(q_basis)).to_ntt()
+    return (xq - xp_in_q).mul_scalar(_moddown_pinv(tuple(q_basis), tuple(p)))
+
+
+@_functools.lru_cache(maxsize=None)
+def _moddown_pinv(q_basis: tuple[int, ...], p: tuple[int, ...]) -> np.ndarray:
+    """P⁻¹ mod q_i for the ModDown division — one host build per basis pair."""
     P = 1
     for pi in p:
         P *= pi
-    pinv = np.array([pow(P % q, q - 2, q) for q in q_basis], dtype=np.uint32)
-    return (xq - xp_in_q).mul_scalar(pinv)
+    return np.array([pow(P % q, q - 2, q) for q in q_basis], dtype=np.uint32)

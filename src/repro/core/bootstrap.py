@@ -54,6 +54,11 @@ class BootContext:
     cts_diags: dict[int, np.ndarray]
     stc_diags: dict[int, np.ndarray]
     use_min_ks: bool = True
+    # encoded-diagonal plaintext cache: (matrix id, diag, shift, basis) →
+    # NTT-domain RnsPoly.  Bootstrapping re-runs the same two linear
+    # transforms at the same levels on every call, so the O(n²) encode work
+    # amortizes to the first invocation.
+    pt_cache: dict = dataclasses.field(default_factory=dict)
 
     @property
     def slots(self) -> int:
@@ -134,10 +139,22 @@ def linear_transform(ct: ckks.Ciphertext, diags: dict[int, np.ndarray],
     n_giants = -(-n // bs)
     babies = ckks.hrot_hoisted(ct, list(range(bs)), keys)
 
-    def encode_diag(vec: np.ndarray) -> pl.RnsPoly:
-        pt = enc.encode(vec, q_top, ct.basis, params.N)
-        return pl.RnsPoly(jnp.asarray(pt), ct.basis, pl.COEFF).to_ntt()
+    def encode_diag(key, vec_fn) -> pl.RnsPoly:
+        """Encode once per (matrix, diag, shift, basis); reuse device-side."""
+        pt = ctx.pt_cache.get(key) if key is not None else None
+        if pt is None:
+            pt = pl.RnsPoly(jnp.asarray(enc.encode(vec_fn(), q_top, ct.basis,
+                                                   params.N)),
+                            ct.basis, pl.COEFF).to_ntt()
+            if key is not None:
+                ctx.pt_cache[key] = pt
+        return pt
 
+    # stable matrix identity: only the context's own (immutable-by-contract)
+    # matrices are cacheable; an ad-hoc diags dict gets no caching rather
+    # than a reusable-id() key that could alias a freed dict.
+    mat = ("cts" if diags is ctx.cts_diags
+           else "stc" if diags is ctx.stc_diags else None)
     inners: list[ckks.Ciphertext] = []
     for g in range(n_giants):
         acc = None
@@ -145,13 +162,17 @@ def linear_transform(ct: ckks.Ciphertext, diags: dict[int, np.ndarray],
             d = g * bs + b
             if d >= n:
                 break
-            vec = np.roll(diags[d], g * bs)     # pre-rotate by -giant amount
-            if not np.any(np.abs(vec) > 1e-14):
+            if not np.any(np.abs(diags[d]) > 1e-14):
                 continue
-            term = ckks.pmult(babies[b], encode_diag(vec), q_top)
+            # diagonal pre-rotated by the -giant amount
+            key = (mat, d, g * bs, ct.basis) if mat is not None else None
+            pt = encode_diag(key, lambda: np.roll(diags[d], g * bs))
+            term = ckks.pmult(babies[b], pt, q_top)
             acc = term if acc is None else ckks.hadd(acc, term)
         if acc is None:
-            acc = ckks.pmult(babies[0], encode_diag(np.zeros(n)), q_top)
+            acc = ckks.pmult(babies[0],
+                             encode_diag(("zero", n, ct.basis),
+                                         lambda: np.zeros(n)), q_top)
         inners.append(acc)
 
     if ctx.use_min_ks:

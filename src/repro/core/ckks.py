@@ -13,13 +13,13 @@ decomposition-reuse that the paper's minimum-key-switching (§V-B) builds on.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax.numpy as jnp
 import numpy as np
 
-import jax.numpy as jnp
-
 from . import bconv as bc
+from . import const_cache
 from . import poly as pl
 from . import trace
 from .keys import Ciphertext, EvalKey, KeySet
@@ -153,14 +153,35 @@ def mul_const(ct: Ciphertext, value: float, params: CkksParams) -> Ciphertext:
     """ct × scalar with drift-free scale: the constant is encoded at exactly
     the level's top prime, so the following rescale restores ct.scale."""
     trace.record_he("PMultConst")
-    ell = ct.level
     q_top = float(ct.basis[-1])
-    c = ct.a.c()
     enc = np.array([round(value * q_top) % q for q in ct.basis],
                    dtype=np.uint32)
     a = ct.a.to_ntt().mul_scalar(enc)
     b = ct.b.to_ntt().mul_scalar(enc)
     return rescale(Ciphertext(a, b, ct.scale * q_top), params, times=1)
+
+
+def _monomial_tables(basis: tuple[int, ...], N: int, power: int):
+    """Host-built ψ^{(2k+1)·power} vector + Shoup companions, one per limb.
+
+    O(ℓ·N) modular exponentiations — far too hot to redo per call (bootstrap
+    applies three monomials per re/im split); the build and device staging
+    are cached in const_cache (single layer, so const_cache.clear() works).
+    """
+    from . import rns as rns_mod
+
+    def build():
+        cols, shoups = [], []
+        for q in basis:
+            psi = rns_mod.find_psi(q, N)
+            vals = np.array([pow(psi, (2 * k + 1) * power % (2 * N), q)
+                             for k in range(N)], dtype=np.uint32)
+            cols.append(vals)
+            shoups.append(np.array([(int(v) << 32) // q for v in vals],
+                                   dtype=np.uint32))
+        return np.stack(cols), np.stack(shoups)
+
+    return const_cache.device_table(("monomial", basis, N, power), build)
 
 
 def mul_monomial(ct: Ciphertext, power: int) -> Ciphertext:
@@ -172,28 +193,12 @@ def mul_monomial(ct: Ciphertext, power: int) -> Ciphertext:
     bootstrapping's re/im splitting to avoid two rescale levels.
     """
     N = ct.a.N
-    from . import rns as rns_mod
-
-    def mono_vec(basis):
-        cols = []
-        for q in basis:
-            psi = rns_mod.find_psi(q, N)
-            k = np.arange(N, dtype=np.int64)
-            vals = np.array([pow(psi, int((2 * kk + 1) * power % (2 * N)), q)
-                             for kk in k], dtype=np.uint32)
-            cols.append(vals)
-        return np.stack(cols)
-
-    vec = mono_vec(ct.basis)
-    shoup = np.stack([
-        np.array([(int(v) << 32) // q for v in row], dtype=np.uint32)
-        for row, q in zip(vec, ct.basis)])
+    vec, shoup = _monomial_tables(ct.basis, N, power % (2 * N))
 
     def apply(p: pl.RnsPoly) -> pl.RnsPoly:
         x = p.to_ntt()
         from . import modmath as mm
-        data = mm.mulmod_shoup(x.data, jnp.asarray(vec), jnp.asarray(shoup),
-                               x.c().q)
+        data = mm.mulmod_shoup(x.data, vec, shoup, x.c().q)
         return pl.RnsPoly(data, x.basis, pl.NTT)
 
     return Ciphertext(apply(ct.a), apply(ct.b), ct.scale)
@@ -319,11 +324,19 @@ def rescale(ct: Ciphertext, params: CkksParams, times: int | None = None) -> Cip
     return Ciphertext(a, b, scale)
 
 
+@functools.lru_cache(maxsize=None)
+def _rescale_qinv(basis: tuple[int, ...]) -> np.ndarray:
+    """q_ℓ⁻¹ mod q_i for the drop of the top prime — one build per basis."""
+    ql = basis[-1]
+    return np.array([pow(ql % q, q - 2, q) for q in basis[:-1]],
+                    dtype=np.uint32)
+
+
 def _rescale_once(a: pl.RnsPoly, b: pl.RnsPoly, scale: float):
     basis = a.basis
     ql = basis[-1]
     new_basis = basis[:-1]
-    qinv = np.array([pow(ql % q, q - 2, q) for q in new_basis], dtype=np.uint32)
+    qinv = _rescale_qinv(basis)
 
     def drop(x: pl.RnsPoly) -> pl.RnsPoly:
         xn = x.to_ntt()

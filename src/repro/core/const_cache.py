@@ -1,0 +1,102 @@
+"""Device-resident constant cache for NTT/four-step/scalar tables.
+
+The CKKS layer runs the pure-``jnp`` path eagerly (un-jitted), so every
+``jnp.asarray(numpy_table)`` inside a transform used to stage the table to the
+device again on *every call*.  This module stages each constant set exactly
+once per key — ``(basis, N)`` for :class:`~repro.core.ntt.NttConsts`,
+``(basis, N, R)`` for :class:`~repro.core.ntt.FourStepConsts`, and an explicit
+key for ad-hoc scalar vectors — and hands back the same jax-array pytree on
+every subsequent lookup.  Under ``jit`` the arrays are already committed
+device buffers, so tracing embeds them without a host round-trip either.
+
+Host-side table *generation* stays in :mod:`repro.core.rns` /
+:mod:`repro.core.ntt` (numpy + Python ints, lru-cached); this cache is purely
+the numpy → device staging layer.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Hashable
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import ntt as nttm
+
+
+class ConstCache:
+    """Tiny keyed staging cache: builder() runs once per key.
+
+    Bounded: once ``max_entries`` is reached the oldest entry is evicted
+    (insertion order).  The named constant families (NTT tables, rescale
+    q⁻¹, ModDown P⁻¹, …) are few per parameter set, but ``mul_const``-style
+    callers key on runtime scalar *values*, which would otherwise grow the
+    store — and pin device buffers — without bound in a long-running server.
+    """
+
+    def __init__(self, max_entries: int = 4096) -> None:
+        self._store: dict[Hashable, Any] = {}
+        self.max_entries = max_entries
+
+    def get(self, key: Hashable, builder: Callable[[], Any]) -> Any:
+        out = self._store.get(key)
+        if out is None:
+            out = builder()
+            if len(self._store) >= self.max_entries:
+                self._store.pop(next(iter(self._store)))
+            self._store[key] = out
+        return out
+
+    def clear(self) -> None:
+        self._store.clear()
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+
+_cache = ConstCache()
+
+
+def clear() -> None:
+    """Drop ALL staged constants (tests / device resets) — the ad-hoc table
+    store and the lru-cached device NttConsts/FourStepConsts alike."""
+    _cache.clear()
+    device_ntt_consts.cache_clear()
+    device_four_step_consts.cache_clear()
+
+
+def _stage(x):
+    return jnp.asarray(x) if isinstance(x, np.ndarray) else x
+
+
+@functools.lru_cache(maxsize=None)
+def device_ntt_consts(basis: tuple[int, ...], N: int) -> nttm.NttConsts:
+    """Stacked NTT constants as device-resident jax arrays, staged once."""
+    c = nttm.stacked_ntt_consts(basis, N)
+    return nttm.NttConsts(*(_stage(f) for f in c))
+
+
+@functools.lru_cache(maxsize=None)
+def device_four_step_consts(basis: tuple[int, ...], N: int,
+                            R: int) -> nttm.FourStepConsts:
+    """Stacked four-step constants as device-resident jax arrays, staged once."""
+    fc = nttm.stacked_four_step_consts(basis, N, R)
+    col = nttm.NttConsts(*(_stage(f) for f in fc.col))
+    return fc._replace(
+        col=col,
+        **{name: _stage(getattr(fc, name))
+           for name in fc._fields if name not in ("R", "C", "col")})
+
+
+def device_table(key: Hashable, builder: Callable[[], Any]) -> Any:
+    """Stage an ad-hoc constant (scalar vector, monomial table, …) once.
+
+    ``builder`` returns a numpy array or a tuple of numpy arrays; the staged
+    jax-array counterpart is cached under ``key``.
+    """
+    def stage():
+        out = builder()
+        if isinstance(out, tuple):
+            return tuple(_stage(o) for o in out)
+        return _stage(out)
+    return _cache.get(key, stage)

@@ -81,12 +81,21 @@ class KeySet:
 
 
 def _digit_interp_factors(params: CkksParams) -> list[list[int]]:
-    """F_j mod m for every modulus m in Q_L∪P, F_j = P·(Q/Q_j)·((Q/Q_j)⁻¹ mod Q_j)."""
-    q, p = params.q, params.p
+    """F_j mod m for every modulus m in Q_L∪P, F_j = P·(Q/Q_j)·((Q/Q_j)⁻¹ mod Q_j).
+
+    Big-int CRT interpolation over the full basis — cached per (q, p, digits)
+    so repeated keygen/add_galois_keys calls pay the host arithmetic once.
+    """
+    digits = tuple(tuple(d) for d in params.digit_bases(params.L))
+    return _digit_interp_factors_cached(params.q, params.p, digits)
+
+
+@functools.lru_cache(maxsize=None)
+def _digit_interp_factors_cached(q: tuple[int, ...], p: tuple[int, ...],
+                                 digits: tuple[tuple[int, ...], ...]):
     P = 1
     for pi in p:
         P *= pi
-    digits = params.digit_bases(params.L)
     out = []
     for dj in digits:
         Qj = 1

@@ -15,6 +15,14 @@ Conventions:
   * Values are kept fully reduced in [0, q) at function boundaries.
   * Per-constant companions (Shoup precomputations) are generated host-side with
     Python ints in :mod:`repro.core.rns`.
+
+Lazy (redundant-representation) arithmetic: the ``*_lazy`` helpers keep values
+in the half-reduced range [0, 2q) instead of [0, q).  Since q < 2**30, any sum
+of two such values (< 4q < 2**32) still fits u32, so a Harvey-style NTT
+butterfly needs only TWO conditional subtracts (one per output) instead of the
+three selects of the eager addmod/submod/mulmod_shoup chain, and the Shoup
+product needs none at all.  A single :func:`reduce_once` pass (or a final full
+``mulmod_shoup``) restores [0, q) at transform boundaries.
 """
 from __future__ import annotations
 
@@ -73,16 +81,55 @@ def negmod(a, q):
     return jnp.where(a == 0, a, q - a)
 
 
+# ----------------------------------------------------------------------------
+# Lazy [0, 2q) arithmetic — Harvey-style NTT butterflies (one select each).
+# ----------------------------------------------------------------------------
+
+def addmod_lazy(a, b, two_q):
+    """(a + b) with one conditional subtract of 2q.
+
+    Inputs in [0, 2q) → output in [0, 2q); the sum < 4q < 2**32 never wraps.
+    """
+    s = a + b
+    return jnp.where(s >= two_q, s - two_q, s)
+
+
+def submod_lazy(a, b, two_q):
+    """(a - b) + 2q with one conditional subtract of 2q.
+
+    Inputs in [0, 2q) → output in [0, 2q); a + (2q - b) < 4q never wraps.
+    """
+    d = a + (two_q - b)
+    return jnp.where(d >= two_q, d - two_q, d)
+
+
+def mulmod_shoup_lazy(x, w, w_shoup, q):
+    """x * w mod q in the lazy range — NO correction select at all.
+
+    With hi = floor(x * w_shoup / 2**32) one shows hi ∈ {⌊xw/q⌋-1, ⌊xw/q⌋},
+    so r = x·w − hi·q lies in [0, 2q) for ANY u32 x (w in [0, q) required).
+    The wrapping u32 subtraction is exact because 2q < 2**31.
+    """
+    x = x.astype(U32)
+    hi = mulhi32(x, w_shoup)
+    return mullo32(x, w) - mullo32(hi, q)
+
+
+def reduce_once(x, q):
+    """Final correction [0, 2q) → [0, q): one conditional subtract."""
+    return jnp.where(x >= q, x - q, x)
+
+
 def mulmod_shoup(x, w, w_shoup, q):
     """x * w mod q with Shoup precomputation  w_shoup = floor(w * 2**32 / q).
 
     This is the multiplier CiFHER wires into every butterfly / BConv MAC: for a
     *known* constant w, the reduction costs one mulhi + two mullo + one
-    conditional subtract.  Requires x in [0, q), w in [0, q), q < 2**31.
+    conditional subtract.  Valid for ANY u32 x (the pre-correction residue is
+    < 2q for all x — see :func:`mulmod_shoup_lazy`), so it doubles as the
+    lazy-range exit path; w in [0, q), q < 2**31.
     """
-    x = x.astype(U32)
-    hi = mulhi32(x, w_shoup)
-    r = mullo32(x, w) - mullo32(hi, q)
+    r = mulmod_shoup_lazy(x, w, w_shoup, q)
     return jnp.where(r >= q, r - q, r)
 
 

@@ -14,6 +14,27 @@ Two implementations of the same transform:
   must produce identical results (validated in tests); the Pallas kernel in
   ``repro.kernels.ntt`` executes this dataflow tile-by-tile in VMEM.
 
+Hot-path design (EXPERIMENTS.md §Perf):
+
+* **Gather-free**: the only data permutation an iterative radix-2 NTT needs is
+  bit reversal, and bit reversal of 2^k indices is exactly "reshape to [2]*k,
+  reverse the axes" — :func:`bitrev_permute` expresses it as a transpose that
+  XLA fuses, instead of a ``jnp.take`` gather.  All twiddle tables are
+  pre-permuted host-side (``psi_rev`` fused-CT order; ``row_stage`` stage-major
+  DIT order) so every stage reads a contiguous slice.
+* **Lazy reduction**: butterflies keep values in [0, 2q)
+  (:func:`repro.core.modmath.addmod_lazy` et al.) — two selects per butterfly
+  instead of three, no select in the Shoup product — with a single
+  :func:`~repro.core.modmath.reduce_once` pass (forward) or the final
+  n⁻¹/Shoup multiply (inverse) restoring [0, q) at the boundary.
+* **Device-resident constants**: callers go through
+  :mod:`repro.core.const_cache` so tables are staged to the device once per
+  (basis, N[, R]) instead of ``jnp.asarray`` per call.
+
+The previous eager implementations are kept as ``*_eager`` — they are the
+before-side of the perf comparison in ``benchmarks/bench_ntt.py`` and an extra
+parity oracle in tests.
+
 All transforms use NATURAL-order inputs and outputs:
     ntt(a)[k] = Σₙ a[n]·ψ^{(2k+1)n} mod q  —  evaluation at the odd root ψ^{2k+1}.
 Natural ordering keeps automorphism a clean index permutation (§II-C).
@@ -34,7 +55,11 @@ from . import rns
 
 
 class NttConsts(NamedTuple):
-    """Stacked per-limb NTT constants for a prime basis (pytree of arrays)."""
+    """Stacked per-limb NTT constants for a prime basis (pytree of arrays).
+
+    NOTE: exactly 12 fields, in this order — ``repro.core.distributed``
+    re-assembles instances positionally from flat shard_map operands.
+    """
     q: np.ndarray                  # (ℓ, 1) u32
     psi_rev: np.ndarray            # (ℓ, N) u32 — fused CT forward table
     psi_rev_shoup: np.ndarray      # (ℓ, N)
@@ -71,13 +96,95 @@ def stacked_ntt_consts(basis: tuple[int, ...], N: int) -> NttConsts:
 
 
 # ----------------------------------------------------------------------------
+# Gather-free bit reversal
+# ----------------------------------------------------------------------------
+
+def bitrev_permute(x):
+    """Bit-reversal permutation of the last axis (length 2^k) without a gather.
+
+    Reversing the k bits of an index is reshaping to k axes of extent 2 and
+    reversing the axis order — a pure transpose, which compiles to data
+    movement XLA can fuse (and that a VMEM-resident Pallas tile performs as
+    register shuffles) instead of the indexed gather ``jnp.take(x, brev)``.
+    Works on numpy and jax arrays alike; self-inverse.
+    """
+    N = x.shape[-1]
+    k = N.bit_length() - 1
+    if k <= 1:
+        return x
+    lead = x.shape[:-1]
+    nl = len(lead)
+    y = x.reshape(*lead, *([2] * k))
+    perm = tuple(range(nl)) + tuple(nl + k - 1 - i for i in range(k))
+    return y.transpose(perm).reshape(*lead, N)
+
+
+# ----------------------------------------------------------------------------
 # Iterative fused CT / GS (the oracle and the CPU-fast path)
 # ----------------------------------------------------------------------------
 
-def ntt(x, c: NttConsts):
-    """Forward negacyclic NTT over the last axis; natural-order in/out."""
+def _ntt_lazy(x, c: NttConsts):
+    """Fused-CT forward stages in the lazy range, natural-order output.
+
+    Input any values < 2q; output in [0, 2q) — callers either chain more lazy
+    stages (four-step) or finish with :func:`~repro.core.modmath.reduce_once`.
+    """
     N = x.shape[-1]
     q = c.q[..., None]  # (ℓ, 1, 1) broadcasting against (..., ℓ, m, t)
+    two_q = q + q
+    lead = x.shape[:-1]
+    m, t = 1, N
+    while m < N:
+        t //= 2
+        y = x.reshape(*lead, m, 2, t)
+        a, b = y[..., 0, :], y[..., 1, :]
+        w = c.psi_rev[:, m:2 * m][:, :, None]
+        ws = c.psi_rev_shoup[:, m:2 * m][:, :, None]
+        bw = mm.mulmod_shoup_lazy(b, w, ws, q)
+        x = jnp.stack([mm.addmod_lazy(a, bw, two_q),
+                       mm.submod_lazy(a, bw, two_q)], axis=-2)
+        x = x.reshape(*lead, N)
+        m *= 2
+    return bitrev_permute(x)  # bit-reversed → natural, gather-free
+
+
+def ntt(x, c: NttConsts):
+    """Forward negacyclic NTT over the last axis; natural-order in/out."""
+    return mm.reduce_once(_ntt_lazy(x, c), c.q)
+
+
+def intt(x, c: NttConsts):
+    """Inverse negacyclic NTT over the last axis; natural-order in/out.
+
+    Accepts lazy inputs (any values < 2q); output fully reduced in [0, q)
+    by the final n⁻¹ Shoup multiply.
+    """
+    N = x.shape[-1]
+    q = c.q[..., None]
+    two_q = q + q
+    lead = x.shape[:-1]
+    x = bitrev_permute(x)  # natural → bit-reversed, gather-free
+    t, m = 1, N
+    while m > 1:
+        h = m // 2
+        y = x.reshape(*lead, h, 2, t)
+        a, b = y[..., 0, :], y[..., 1, :]
+        w = c.psi_inv_rev[:, h:2 * h][:, :, None]
+        ws = c.psi_inv_rev_shoup[:, h:2 * h][:, :, None]
+        u = mm.addmod_lazy(a, b, two_q)
+        v = mm.mulmod_shoup_lazy(mm.submod_lazy(a, b, two_q), w, ws, q)
+        x = jnp.stack([u, v], axis=-2).reshape(*lead, N)
+        t *= 2
+        m = h
+    return mm.mulmod_shoup(x, c.n_inv, c.n_inv_shoup, c.q)
+
+
+# -- previous eager path (before-side of the perf comparison; extra oracle) ---
+
+def ntt_eager(x, c: NttConsts):
+    """Pre-overhaul forward NTT: eager [0, q) reduction + ``jnp.take`` gather."""
+    N = x.shape[-1]
+    q = c.q[..., None]
     lead = x.shape[:-1]
     m, t = 1, N
     while m < N:
@@ -90,15 +197,15 @@ def ntt(x, c: NttConsts):
         x = jnp.stack([mm.addmod(a, bw, q), mm.submod(a, bw, q)], axis=-2)
         x = x.reshape(*lead, N)
         m *= 2
-    return jnp.take(x, jnp.asarray(c.brev), axis=-1)  # bit-reversed → natural
+    return jnp.take(x, jnp.asarray(c.brev), axis=-1)
 
 
-def intt(x, c: NttConsts):
-    """Inverse negacyclic NTT over the last axis; natural-order in/out."""
+def intt_eager(x, c: NttConsts):
+    """Pre-overhaul inverse NTT: eager reduction + ``jnp.take`` gather."""
     N = x.shape[-1]
     q = c.q[..., None]
     lead = x.shape[:-1]
-    x = jnp.take(x, jnp.asarray(c.brev), axis=-1)  # natural → bit-reversed
+    x = jnp.take(x, jnp.asarray(c.brev), axis=-1)
     t, m = 1, N
     while m > 1:
         h = m // 2
@@ -135,6 +242,11 @@ class FourStepConsts(NamedTuple):
     c_inv: np.ndarray            # (ℓ, 1)
     c_inv_shoup: np.ndarray
     brev_c: np.ndarray           # (C,) i32
+    # pre-permuted stage-major DIT twiddles (stage m = slice [m-1, 2m-1))
+    row_stage: np.ndarray        # (ℓ, C-1)
+    row_stage_shoup: np.ndarray
+    row_stage_inv: np.ndarray
+    row_stage_inv_shoup: np.ndarray
 
 
 @functools.lru_cache(maxsize=None)
@@ -172,33 +284,66 @@ def stacked_four_step_consts(basis: tuple[int, ...], N: int, R: int) -> FourStep
         c_inv=colv(lambda t: t.c_inv),
         c_inv_shoup=colv(lambda t: t.c_inv_shoup),
         brev_c=rns.bitrev_indices(C).astype(np.int32),
+        row_stage=stack(lambda t: t.row_stage),
+        row_stage_shoup=stack(lambda t: t.row_stage_shoup),
+        row_stage_inv=stack(lambda t: t.row_stage_inv),
+        row_stage_inv_shoup=stack(lambda t: t.row_stage_inv_shoup),
     )
 
 
-def _cyclic_dft(x, pow_tab, pow_tab_shoup, brev_c, q):
+def _cyclic_dft_lazy(x, stage_tab, stage_tab_shoup, q):
     """Length-C cyclic DIT NTT over the last axis, natural-order in/out.
 
-    ``pow_tab``: (ℓ, C/2) powers ω^i (or ω^{-i} for the inverse direction);
-    stage-m twiddles are the stride-C/(2m) subsampling of this table.
-    ``x``: (..., ℓ, rows, C).  q: (ℓ, 1) broadcast to (ℓ, 1, 1).
+    Lazy-range butterflies: inputs < 2q → outputs in [0, 2q).  ``stage_tab``
+    is the (ℓ, C-1) stage-major table — stage m reads the contiguous slice
+    [m-1, 2m-1) (no strided subsampling, no gather).  q: (ℓ, 1).
     """
     C = x.shape[-1]
     lead = x.shape[:-1]
     qb = q[..., None]
-    x = jnp.take(x, jnp.asarray(brev_c), axis=-1)
+    two_q = qb + qb
+    x = bitrev_permute(x)
+    m = 1
+    while m < C:
+        y = x.reshape(*lead[:-1], lead[-1] * (C // (2 * m)), 2, m)
+        a, b = y[..., 0, :], y[..., 1, :]
+        w = stage_tab[:, m - 1:2 * m - 1][:, None, :]        # (ℓ, 1, m)
+        ws = stage_tab_shoup[:, m - 1:2 * m - 1][:, None, :]
+        bw = mm.mulmod_shoup_lazy(b, w, ws, qb)
+        x = jnp.stack([mm.addmod_lazy(a, bw, two_q),
+                       mm.submod_lazy(a, bw, two_q)], axis=-2)
+        x = x.reshape(*lead, C)
+        m *= 2
+    return x
+
+
+def _cyclic_dft(x, pow_tab, pow_tab_shoup, brev_c, q):
+    """Length-C cyclic DIT NTT, fully-reduced in/out (shard_map-compat API).
+
+    ``pow_tab``: (ℓ, C/2) powers ω^i; stage-m twiddles are the stride-C/(2m)
+    subsampling.  ``brev_c`` is accepted for operand-signature compatibility
+    with ``repro.core.distributed`` but the data permutation itself is the
+    gather-free :func:`bitrev_permute`.
+    """
+    del brev_c
+    C = x.shape[-1]
+    lead = x.shape[:-1]
+    qb = q[..., None]
+    two_q = qb + qb
+    x = bitrev_permute(x)
     m = 1
     while m < C:
         y = x.reshape(*lead[:-1], lead[-1] * (C // (2 * m)), 2, m)
         a, b = y[..., 0, :], y[..., 1, :]
         stride = C // (2 * m)
-        w = jnp.asarray(pow_tab[:, ::stride][:, :m])[:, None, :]       # (ℓ,1,m)
-        ws = jnp.asarray(pow_tab_shoup[:, ::stride][:, :m])[:, None, :]
-        # a/b have shape (..., ℓ, rows·C/(2m), m); w broadcasts over rows.
-        bw = mm.mulmod_shoup(b, w, ws, qb)
-        x = jnp.stack([mm.addmod(a, bw, qb), mm.submod(a, bw, qb)], axis=-2)
+        w = pow_tab[:, ::stride][:, :m][:, None, :]          # (ℓ, 1, m)
+        ws = pow_tab_shoup[:, ::stride][:, :m][:, None, :]
+        bw = mm.mulmod_shoup_lazy(b, w, ws, qb)
+        x = jnp.stack([mm.addmod_lazy(a, bw, two_q),
+                       mm.submod_lazy(a, bw, two_q)], axis=-2)
         x = x.reshape(*lead, C)
         m *= 2
-    return x
+    return mm.reduce_once(x, qb)
 
 
 def four_step_ntt(x, fc: FourStepConsts):
@@ -206,7 +351,8 @@ def four_step_ntt(x, fc: FourStepConsts):
 
     Input/output natural order, identical to :func:`ntt` for every valid R.
     Data is viewed as A[n₁, n₂] = a[C·n₁ + n₂]; the output is re-flattened so
-    that â[k₁ + R·k₂] = B[k₁, k₂].
+    that â[k₁ + R·k₂] = B[k₁, k₂].  All three phases run in the lazy range
+    with a single correction pass at the end.
     """
     R, C = fc.R, fc.C
     lead = x.shape[:-1]
@@ -214,13 +360,13 @@ def four_step_ntt(x, fc: FourStepConsts):
     # 1) R-point negacyclic NTT along columns (axis -2), root ψ^C.
     #    Move n₂ before the limb axis so the (ℓ, R) tables broadcast.
     A = jnp.moveaxis(A, -1, -3)                  # (..., C, ℓ, R)
-    A = ntt(A, fc.col)
+    A = _ntt_lazy(A, fc.col)
     A = jnp.moveaxis(A, -3, -1)                  # (..., ℓ, R, C), k₁ natural
-    # 2) inter-step twiddle ψ^{(2k₁+1)·n₂}
-    A = mm.mulmod_shoup(A, jnp.asarray(fc.twiddle), jnp.asarray(fc.twiddle_shoup),
-                        fc.q[..., None])
+    # 2) inter-step twiddle ψ^{(2k₁+1)·n₂} — selectless lazy Shoup product
+    A = mm.mulmod_shoup_lazy(A, fc.twiddle, fc.twiddle_shoup, fc.q[..., None])
     # 3) C-point cyclic DFT along rows (axis -1), root ω = ψ^{2R}.
-    A = _cyclic_dft(A, fc.row_pow, fc.row_pow_shoup, fc.brev_c, fc.q)
+    A = _cyclic_dft_lazy(A, fc.row_stage, fc.row_stage_shoup, fc.q)
+    A = mm.reduce_once(A, fc.q[..., None])
     # 4) transpose so that flattening yields â[k₁ + R·k₂].
     return jnp.swapaxes(A, -1, -2).reshape(*lead, R * C)
 
@@ -231,18 +377,70 @@ def four_step_intt(x, fc: FourStepConsts):
     lead = x.shape[:-1]
     B = x.reshape(*lead, C, R)
     B = jnp.swapaxes(B, -1, -2)                  # (..., ℓ, R, C), [k₁, k₂]
-    # inverse row DFT (ω^{-1}), then scale by C⁻¹
-    B = _cyclic_dft(B, fc.row_pow_inv, fc.row_pow_inv_shoup, fc.brev_c, fc.q)
-    B = mm.mulmod_shoup(B, fc.c_inv[..., None], fc.c_inv_shoup[..., None],
-                        fc.q[..., None])
+    # inverse row DFT (ω^{-1}), then scale by C⁻¹ — all lazy
+    B = _cyclic_dft_lazy(B, fc.row_stage_inv, fc.row_stage_inv_shoup, fc.q)
+    B = mm.mulmod_shoup_lazy(B, fc.c_inv[..., None], fc.c_inv_shoup[..., None],
+                             fc.q[..., None])
     # inverse twiddle
-    B = mm.mulmod_shoup(B, jnp.asarray(fc.twiddle_inv), jnp.asarray(fc.twiddle_inv_shoup),
-                        fc.q[..., None])
-    # inverse column negacyclic NTT (includes R⁻¹ scaling)
+    B = mm.mulmod_shoup_lazy(B, fc.twiddle_inv, fc.twiddle_inv_shoup,
+                             fc.q[..., None])
+    # inverse column negacyclic NTT (accepts lazy inputs; includes R⁻¹ scaling
+    # whose full Shoup reduction restores [0, q))
     B = jnp.moveaxis(B, -1, -3)                  # (..., C, ℓ, R)
     B = intt(B, fc.col)
     B = jnp.moveaxis(B, -3, -1)                  # (..., ℓ, R, C) = A[n₁, n₂]
     return B.reshape(*lead, R * C)
+
+
+def four_step_ntt_eager(x, fc: FourStepConsts):
+    """Pre-overhaul four-step forward (eager reduction, gathers, asarray)."""
+    R, C = fc.R, fc.C
+    lead = x.shape[:-1]
+    A = x.reshape(*lead, R, C)
+    A = jnp.moveaxis(A, -1, -3)
+    A = ntt_eager(A, fc.col)
+    A = jnp.moveaxis(A, -3, -1)
+    A = mm.mulmod_shoup(A, jnp.asarray(fc.twiddle), jnp.asarray(fc.twiddle_shoup),
+                        fc.q[..., None])
+    A = _cyclic_dft_eager(A, fc.row_pow, fc.row_pow_shoup, fc.brev_c, fc.q)
+    return jnp.swapaxes(A, -1, -2).reshape(*lead, R * C)
+
+
+def four_step_intt_eager(x, fc: FourStepConsts):
+    """Pre-overhaul four-step inverse (eager reduction, gathers, asarray)."""
+    R, C = fc.R, fc.C
+    lead = x.shape[:-1]
+    B = x.reshape(*lead, C, R)
+    B = jnp.swapaxes(B, -1, -2)
+    B = _cyclic_dft_eager(B, fc.row_pow_inv, fc.row_pow_inv_shoup, fc.brev_c, fc.q)
+    B = mm.mulmod_shoup(B, fc.c_inv[..., None], fc.c_inv_shoup[..., None],
+                        fc.q[..., None])
+    B = mm.mulmod_shoup(B, jnp.asarray(fc.twiddle_inv),
+                        jnp.asarray(fc.twiddle_inv_shoup), fc.q[..., None])
+    B = jnp.moveaxis(B, -1, -3)
+    B = intt_eager(B, fc.col)
+    B = jnp.moveaxis(B, -3, -1)
+    return B.reshape(*lead, R * C)
+
+
+def _cyclic_dft_eager(x, pow_tab, pow_tab_shoup, brev_c, q):
+    """Pre-overhaul cyclic DIT NTT: gather bit-reversal + eager reduction."""
+    C = x.shape[-1]
+    lead = x.shape[:-1]
+    qb = q[..., None]
+    x = jnp.take(x, jnp.asarray(brev_c), axis=-1)
+    m = 1
+    while m < C:
+        y = x.reshape(*lead[:-1], lead[-1] * (C // (2 * m)), 2, m)
+        a, b = y[..., 0, :], y[..., 1, :]
+        stride = C // (2 * m)
+        w = jnp.asarray(pow_tab[:, ::stride][:, :m])[:, None, :]
+        ws = jnp.asarray(pow_tab_shoup[:, ::stride][:, :m])[:, None, :]
+        bw = mm.mulmod_shoup(b, w, ws, qb)
+        x = jnp.stack([mm.addmod(a, bw, qb), mm.submod(a, bw, qb)], axis=-2)
+        x = x.reshape(*lead, C)
+        m *= 2
+    return x
 
 
 # ----------------------------------------------------------------------------

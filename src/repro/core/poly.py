@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import const_cache
 from . import modmath as mm
 from . import ntt as nttm
 from . import rns
@@ -29,7 +30,8 @@ NTT = "ntt"
 
 
 def consts(basis: tuple[int, ...], N: int) -> nttm.NttConsts:
-    return nttm.stacked_ntt_consts(tuple(basis), N)
+    """Per-limb NTT constants, staged to the device once per (basis, N)."""
+    return const_cache.device_ntt_consts(tuple(basis), N)
 
 
 @functools.partial(
@@ -89,12 +91,24 @@ class RnsPoly:
                        self.basis, NTT)
 
     def mul_scalar(self, scalars: np.ndarray) -> "RnsPoly":
-        """Multiply limb i by the constant ``scalars[i]`` (Shoup)."""
+        """Multiply limb i by the constant ``scalars[i]`` (Shoup).
+
+        The per-limb Shoup companions are built host-side once per
+        (basis, scalars) — rescale/ModDown reuse the same vector every call —
+        and staged device-resident through the constant cache.
+        """
         c = self.c()
-        w = np.asarray(scalars, dtype=np.uint32).reshape(-1, 1)
-        ws = np.array([[rns.shoup(int(w[i, 0]), q)] for i, q in enumerate(self.basis)],
-                      dtype=np.uint32)
-        return RnsPoly(mm.mulmod_shoup(self.data, jnp.asarray(w), jnp.asarray(ws), c.q),
+        sv = np.asarray(scalars, dtype=np.uint32).reshape(-1)
+
+        def build():
+            w = sv.reshape(-1, 1)
+            ws = np.array([[rns.shoup(int(v), q)] for v, q in zip(sv, self.basis)],
+                          dtype=np.uint32)
+            return w, ws
+
+        w, ws = const_cache.device_table(("mul_scalar", self.basis, sv.tobytes()),
+                                         build)
+        return RnsPoly(mm.mulmod_shoup(self.data, w, ws, c.q),
                        self.basis, self.domain)
 
     # -- structure ------------------------------------------------------------

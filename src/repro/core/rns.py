@@ -157,6 +157,14 @@ class FourStepTables:
     row_pow_shoup: np.ndarray
     row_pow_inv: np.ndarray
     row_pow_inv_shoup: np.ndarray
+    # pre-permuted stage-major twiddles: stage m (m = 1, 2, …, C/2) occupies
+    # the contiguous slice [m-1, 2m-1) holding ω^{j·C/(2m)} for j < m — the
+    # exact values the DIT row phase needs, so the kernel reads a contiguous
+    # slice per stage instead of a strided gather of ``row_pow``.
+    row_stage: np.ndarray                 # (C-1,)
+    row_stage_shoup: np.ndarray
+    row_stage_inv: np.ndarray
+    row_stage_inv_shoup: np.ndarray
     c_inv: int
     c_inv_shoup: int
 
@@ -207,6 +215,10 @@ def four_step_tables(q: int, N: int, R: int) -> FourStepTables:
     omega_inv = pow(omega, q - 2, q)
     row, row_s = _pack_shoup([pow(omega, i, q) for i in range(C // 2)], q)
     rowi, rowi_s = _pack_shoup([pow(omega_inv, i, q) for i in range(C // 2)], q)
+    stage, stage_i = _stage_major_powers(omega, q, C), \
+        _stage_major_powers(omega_inv, q, C)
+    st_w, st_s = _pack_shoup(stage, q)
+    sti_w, sti_s = _pack_shoup(stage_i, q)
     c_inv = pow(C, q - 2, q)
     return FourStepTables(
         R=R, C=C, col=col,
@@ -214,8 +226,29 @@ def four_step_tables(q: int, N: int, R: int) -> FourStepTables:
         twiddle_inv=tw_i, twiddle_inv_shoup=tw_is,
         row_pow=row, row_pow_shoup=row_s,
         row_pow_inv=rowi, row_pow_inv_shoup=rowi_s,
+        row_stage=st_w, row_stage_shoup=st_s,
+        row_stage_inv=sti_w, row_stage_inv_shoup=sti_s,
         c_inv=c_inv, c_inv_shoup=shoup(c_inv, q),
     )
+
+
+def _stage_major_powers(omega: int, q: int, C: int) -> list[int]:
+    """Concatenated per-stage DIT twiddles ω^{j·C/(2m)}, j < m, m = 1..C/2.
+
+    Length C-1; stage m starts at offset m-1 (= Σ of earlier stage sizes), so
+    every stage reads the contiguous slice [m-1, 2m-1).
+    """
+    out: list[int] = []
+    m = 1
+    while m < C:
+        stride = C // (2 * m)
+        step = pow(omega, stride, q)
+        w = 1
+        for _ in range(m):
+            out.append(w)
+            w = w * step % q
+        m *= 2
+    return out
 
 
 # ----------------------------------------------------------------------------

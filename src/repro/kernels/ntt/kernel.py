@@ -1,21 +1,32 @@
 """Four-step recomposable NTT as a Pallas kernel (paper §III-B → TPU).
 
-Dataflow per grid step = one (poly, limb) pair resident in VMEM:
+Dataflow per grid step = one (poly, limb-block) pair resident in VMEM:
 
-    HBM ──(BlockSpec (1,1,N))──> VMEM tile x
-    x.reshape(R, C)
-    column phase : R-point negacyclic NTT (root ψ^C)   — fused CT butterflies
-    twiddle      : ⊙ ψ^{(2k₁+1)·n₂}                     — Shoup mulmod
-    row phase    : C-point cyclic DFT (root ψ^{2R})     — fused CT butterflies
+    HBM ──(BlockSpec (1,L,N))──> VMEM tile x          (L = limbs_per_block)
+    x.reshape(L, R, C)
+    column phase : R-point negacyclic NTT (root ψ^C)   — lazy CT butterflies
+    twiddle      : ⊙ ψ^{(2k₁+1)·n₂}                     — selectless lazy Shoup
+    row phase    : C-point cyclic DFT (root ψ^{2R})     — lazy CT butterflies
+    correction   : one [0,2q) → [0,q) pass
     transpose    : B[k₁,k₂] → â[k₁+R·k₂]
     VMEM ──> HBM
 
 ``R`` is the recomposition knob: CiFHER's "number of NTTU submodules"
 becomes the row extent of the VMEM tile; every power-of-two R produces
-identical results (tests sweep it).  Butterfly stages are statically unrolled
-reshape/stack ops — VREG-friendly; the two bit-reversal index lookups use
-in-VMEM gathers (interpret-exact; on real TPU they would be absorbed into
-pre-permuted twiddle tables — see EXPERIMENTS.md §Perf for that iteration).
+identical results (tests sweep it).  Hot-path properties (EXPERIMENTS.md
+§Perf):
+
+* **Gather-free**: all twiddle tables arrive pre-permuted from
+  ``repro.core.rns`` (fused-CT ``psi_rev`` order; stage-major ``row_stage``
+  with one contiguous slice per DIT stage), and the two data bit-reversals
+  are reshape/transpose shuffles (:func:`repro.core.ntt.bitrev_permute`) —
+  no in-VMEM index gathers anywhere in the body.
+* **Lazy reduction**: butterflies run in [0, 2q) (two selects instead of
+  three); a single correction pass (forward) or the final R⁻¹ Shoup multiply
+  (inverse) restores [0, q).
+* **Batched grid**: the (poly, limb-chunk) space is flattened to ONE grid
+  dimension and each program transforms ``limbs_per_block`` limbs, so small
+  polynomials amortize per-program overhead across limbs.
 
 The kernel body calls the *same* ``repro.core.modmath`` u32 primitives as the
 pure-jnp path, so kernel-vs-oracle equality is a true end-to-end check of the
@@ -29,155 +40,195 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import const_cache
 from repro.core import modmath as mm
-from repro.core import ntt as nttm
+from repro.core.ntt import bitrev_permute
 
 
-def _col_ntt(x, psi_rev, psi_rev_shoup, q, brev):
-    """Fused CT negacyclic NTT along the last axis of (rows, R) values."""
-    R = x.shape[-1]
+def _col_ntt(x, psi_rev, psi_rev_shoup, q):
+    """Lazy fused-CT negacyclic NTT along the last axis of (L, rows, R) values.
+
+    ``psi_rev``: (L, R) pre-permuted tables; ``q``: (L, 1, 1).  Values stay in
+    [0, 2q); output order natural (gather-free bit reversal).
+    """
+    L, rows, R = x.shape
+    q4 = q[..., None]
+    two_q4 = q4 + q4
     m, t = 1, R
     while m < R:
         t //= 2
-        y = x.reshape(-1, m, 2, t)
-        a, b = y[:, :, 0, :], y[:, :, 1, :]
-        w = psi_rev[m:2 * m][None, :, None]
-        ws = psi_rev_shoup[m:2 * m][None, :, None]
-        bw = mm.mulmod_shoup(b, w, ws, q)
-        x = jnp.stack([mm.addmod(a, bw, q), mm.submod(a, bw, q)], axis=2)
-        x = x.reshape(-1, R)
+        y = x.reshape(L, rows, m, 2, t)
+        a, b = y[..., 0, :], y[..., 1, :]
+        w = psi_rev[:, m:2 * m][:, None, :, None]
+        ws = psi_rev_shoup[:, m:2 * m][:, None, :, None]
+        bw = mm.mulmod_shoup_lazy(b, w, ws, q4)
+        x = jnp.stack([mm.addmod_lazy(a, bw, two_q4),
+                       mm.submod_lazy(a, bw, two_q4)], axis=-2)
+        x = x.reshape(L, rows, R)
         m *= 2
-    return jnp.take(x, brev, axis=-1)
+    return bitrev_permute(x)
 
 
-def _col_intt(x, psi_inv_rev, psi_inv_rev_shoup, n_inv, n_inv_shoup, q, brev):
-    R = x.shape[-1]
-    x = jnp.take(x, brev, axis=-1)
+def _col_intt(x, psi_inv_rev, psi_inv_rev_shoup, n_inv, n_inv_shoup, q):
+    """Lazy fused-GS inverse along the last axis; fully reduced on exit."""
+    L, rows, R = x.shape
+    q4 = q[..., None]
+    two_q4 = q4 + q4
+    x = bitrev_permute(x)
     t, m = 1, R
     while m > 1:
         h = m // 2
-        y = x.reshape(-1, h, 2, t)
-        a, b = y[:, :, 0, :], y[:, :, 1, :]
-        w = psi_inv_rev[h:2 * h][None, :, None]
-        ws = psi_inv_rev_shoup[h:2 * h][None, :, None]
-        u = mm.addmod(a, b, q)
-        v = mm.mulmod_shoup(mm.submod(a, b, q), w, ws, q)
-        x = jnp.stack([u, v], axis=2).reshape(-1, R)
+        y = x.reshape(L, rows, h, 2, t)
+        a, b = y[..., 0, :], y[..., 1, :]
+        w = psi_inv_rev[:, h:2 * h][:, None, :, None]
+        ws = psi_inv_rev_shoup[:, h:2 * h][:, None, :, None]
+        u = mm.addmod_lazy(a, b, two_q4)
+        v = mm.mulmod_shoup_lazy(mm.submod_lazy(a, b, two_q4), w, ws, q4)
+        x = jnp.stack([u, v], axis=-2).reshape(L, rows, R)
         t *= 2
         m = h
+    # full Shoup reduction: accepts the lazy range, lands in [0, q)
     return mm.mulmod_shoup(x, n_inv, n_inv_shoup, q)
 
 
-def _row_dft(x, pow_tab, pow_tab_shoup, brev_c, q):
-    """Cyclic DIT NTT along the last axis of (rows, C) values."""
-    C = x.shape[-1]
-    x = jnp.take(x, brev_c, axis=-1)
+def _row_dft(x, stage_tab, stage_tab_shoup, q):
+    """Lazy cyclic DIT NTT along the last axis of (L, rows, C) values.
+
+    ``stage_tab``: (L, C-1) stage-major pre-permuted twiddles — stage m reads
+    the contiguous slice [m-1, 2m-1).  Values stay in [0, 2q).
+    """
+    L, rows, C = x.shape
+    two_q = q + q
+    x = bitrev_permute(x)
     m = 1
     while m < C:
-        y = x.reshape(-1, 2, m)
-        a, b = y[:, 0, :], y[:, 1, :]
-        stride = C // (2 * m)
-        w = pow_tab[::stride][:m][None, :]
-        ws = pow_tab_shoup[::stride][:m][None, :]
-        bw = mm.mulmod_shoup(b, w, ws, q)
-        x = jnp.stack([mm.addmod(a, bw, q), mm.submod(a, bw, q)],
-                      axis=1).reshape(-1, C)
+        y = x.reshape(L, -1, 2, m)
+        a, b = y[..., 0, :], y[..., 1, :]
+        w = stage_tab[:, m - 1:2 * m - 1][:, None, :]
+        ws = stage_tab_shoup[:, m - 1:2 * m - 1][:, None, :]
+        bw = mm.mulmod_shoup_lazy(b, w, ws, q)
+        x = jnp.stack([mm.addmod_lazy(a, bw, two_q),
+                       mm.submod_lazy(a, bw, two_q)], axis=-2)
+        x = x.reshape(L, rows, C)
         m *= 2
     return x
 
 
-def _fwd_body(R, C,
+def _fwd_body(R, C, L,
               x_ref, colpsi_ref, colpsis_ref, tw_ref, tws_ref,
-              rowp_ref, rowps_ref, q_ref, brev_r_ref, brev_c_ref, o_ref):
-    q = q_ref[0, 0]
-    A = x_ref[0, 0].reshape(R, C)
-    # column phase (along axis 0): operate on the transpose so the fused-CT
+              rowst_ref, rowsts_ref, q_ref, o_ref):
+    q3 = q_ref[...][..., None]                           # (L, 1, 1)
+    A = x_ref[0].reshape(L, R, C)
+    # column phase (along axis -2): operate on the transpose so the fused-CT
     # helper sees contiguous last-axis vectors.
-    At = A.T                                             # (C, R)
-    At = _col_ntt(At, colpsi_ref[0], colpsis_ref[0], q, brev_r_ref[...])
-    A = At.T                                             # (R, C), k₁ natural
-    A = mm.mulmod_shoup(A, tw_ref[0], tws_ref[0], q)     # inter-step twiddle
-    A = _row_dft(A, rowp_ref[0], rowps_ref[0], brev_c_ref[...], q)
-    o_ref[0, 0] = A.T.reshape(R * C)                     # â[k₁ + R·k₂]
+    At = jnp.swapaxes(A, -1, -2)                         # (L, C, R)
+    At = _col_ntt(At, colpsi_ref[...], colpsis_ref[...], q3)
+    A = jnp.swapaxes(At, -1, -2)                         # (L, R, C), k₁ natural
+    A = mm.mulmod_shoup_lazy(A, tw_ref[...], tws_ref[...], q3)
+    A = _row_dft(A, rowst_ref[...], rowsts_ref[...], q3)
+    A = mm.reduce_once(A, q3)                            # [0, 2q) → [0, q)
+    o_ref[0] = jnp.swapaxes(A, -1, -2).reshape(L, R * C)  # â[k₁ + R·k₂]
 
 
-def _inv_body(R, C,
+def _inv_body(R, C, L,
               x_ref, colpsii_ref, colpsiis_ref, twi_ref, twis_ref,
-              rowpi_ref, rowpis_ref, rinv_ref, rinvs_ref, cinv_ref, cinvs_ref,
-              q_ref, brev_r_ref, brev_c_ref, o_ref):
-    q = q_ref[0, 0]
-    B = x_ref[0, 0].reshape(C, R).T                      # (R, C) = B[k₁, k₂]
-    B = _row_dft(B, rowpi_ref[0], rowpis_ref[0], brev_c_ref[...], q)
-    B = mm.mulmod_shoup(B, cinv_ref[0, 0], cinvs_ref[0, 0], q)
-    B = mm.mulmod_shoup(B, twi_ref[0], twis_ref[0], q)
-    Bt = B.T                                             # (C, R)
-    Bt = _col_intt(Bt, colpsii_ref[0], colpsiis_ref[0],
-                   rinv_ref[0, 0], rinvs_ref[0, 0], q, brev_r_ref[...])
-    o_ref[0, 0] = Bt.T.reshape(R * C)                    # A[n₁, n₂] flattened
+              rowsti_ref, rowstis_ref, rinv_ref, rinvs_ref,
+              cinv_ref, cinvs_ref, q_ref, o_ref):
+    q3 = q_ref[...][..., None]                           # (L, 1, 1)
+    B = x_ref[0].reshape(L, C, R)
+    B = jnp.swapaxes(B, -1, -2)                          # (L, R, C) = B[k₁, k₂]
+    B = _row_dft(B, rowsti_ref[...], rowstis_ref[...], q3)
+    B = mm.mulmod_shoup_lazy(B, cinv_ref[...][..., None],
+                             cinvs_ref[...][..., None], q3)
+    B = mm.mulmod_shoup_lazy(B, twi_ref[...], twis_ref[...], q3)
+    Bt = jnp.swapaxes(B, -1, -2)                         # (L, C, R)
+    Bt = _col_intt(Bt, colpsii_ref[...], colpsiis_ref[...],
+                   rinv_ref[...][..., None], rinvs_ref[...][..., None], q3)
+    o_ref[0] = jnp.swapaxes(Bt, -1, -2).reshape(L, R * C)  # A[n₁, n₂] flattened
 
 
-def _limb_spec(shape_tail):
-    """BlockSpec selecting one limb of a per-limb table: (1, *tail)."""
-    nd = len(shape_tail)
-    return pl.BlockSpec((1,) + shape_tail, lambda p, i: (i,) + (0,) * nd)
+def effective_limbs_per_block(ell: int, limbs_per_block: int | None) -> int:
+    """Largest divisor of ℓ not exceeding the requested block size (default 4)."""
+    want = max(1, min(ell, limbs_per_block if limbs_per_block else 4))
+    return max(d for d in range(1, want + 1) if ell % d == 0)
 
 
-@functools.partial(jax.jit, static_argnames=("R", "basis", "forward", "interpret"))
 def ntt_pallas(x, *, R: int, basis: tuple[int, ...], forward: bool = True,
-               interpret: bool = True):
-    """(P, ℓ, N) u32 → same shape; grid = (poly, limb), one limb per program."""
+               interpret: bool = True, limbs_per_block: int | None = None):
+    """(P, ℓ, N) u32 → same shape.
+
+    Grid = flattened (poly, limb-chunk): one grid dimension of
+    P · (ℓ / limbs_per_block) programs, each transforming a (limbs_per_block,
+    N) block in VMEM.  ``limbs_per_block`` is rounded down to a divisor of ℓ.
+
+    Constants are staged to the device once per (basis, N, R) *outside* the
+    jitted call and passed as operands, so retraces never restage them.
+    """
     P, ell, N = x.shape
-    C = N // R
-    fc = nttm.stacked_four_step_consts(basis, N, R)
-    grid = (P, ell)
-    x_spec = pl.BlockSpec((1, 1, N), lambda p, i: (p, i, 0))
-    out_shape = jax.ShapeDtypeStruct(x.shape, jnp.uint32)
+    assert N // R >= 2, "four-step split needs C = N/R >= 2"
+    L = effective_limbs_per_block(ell, limbs_per_block)
+    fc = const_cache.device_four_step_consts(basis, N, R)
     if forward:
-        body = functools.partial(_fwd_body, R, C)
-        operands = (
-            x,
+        tables = (
             fc.col.psi_rev, fc.col.psi_rev_shoup,
             fc.twiddle, fc.twiddle_shoup,
-            fc.row_pow, fc.row_pow_shoup,
+            fc.row_stage, fc.row_stage_shoup,
             fc.q,
         )
-        specs = [
-            x_spec,
-            _limb_spec((R,)), _limb_spec((R,)),
-            _limb_spec((R, C)), _limb_spec((R, C)),
-            _limb_spec((C // 2,)), _limb_spec((C // 2,)),
-            _limb_spec((1,)),
-        ]
     else:
-        body = functools.partial(_inv_body, R, C)
-        operands = (
-            x,
+        tables = (
             fc.col.psi_inv_rev, fc.col.psi_inv_rev_shoup,
             fc.twiddle_inv, fc.twiddle_inv_shoup,
-            fc.row_pow_inv, fc.row_pow_inv_shoup,
+            fc.row_stage_inv, fc.row_stage_inv_shoup,
             fc.col.n_inv, fc.col.n_inv_shoup,
             fc.c_inv, fc.c_inv_shoup,
             fc.q,
         )
+    return _ntt_pallas_call(x, *tables, R=R, forward=forward,
+                            interpret=interpret, L=L)
+
+
+@functools.partial(jax.jit, static_argnames=("R", "forward", "interpret", "L"))
+def _ntt_pallas_call(x, *tables, R: int, forward: bool, interpret: bool,
+                     L: int):
+    P, ell, N = x.shape
+    C = N // R
+    nblk = ell // L
+    grid = (P * nblk,)
+
+    def _limb_spec(shape_tail):
+        """BlockSpec selecting one limb-chunk of a per-limb table."""
+        nd = len(shape_tail)
+        return pl.BlockSpec((L,) + shape_tail,
+                            lambda g: (g % nblk,) + (0,) * nd)
+
+    x_spec = pl.BlockSpec((1, L, N), lambda g: (g // nblk, g % nblk, 0))
+    out_shape = jax.ShapeDtypeStruct(x.shape, jnp.uint32)
+    if forward:
+        body = functools.partial(_fwd_body, R, C, L)
         specs = [
             x_spec,
             _limb_spec((R,)), _limb_spec((R,)),
             _limb_spec((R, C)), _limb_spec((R, C)),
-            _limb_spec((C // 2,)), _limb_spec((C // 2,)),
+            _limb_spec((C - 1,)), _limb_spec((C - 1,)),
+            _limb_spec((1,)),
+        ]
+    else:
+        body = functools.partial(_inv_body, R, C, L)
+        specs = [
+            x_spec,
+            _limb_spec((R,)), _limb_spec((R,)),
+            _limb_spec((R, C)), _limb_spec((R, C)),
+            _limb_spec((C - 1,)), _limb_spec((C - 1,)),
             _limb_spec((1,)), _limb_spec((1,)),
             _limb_spec((1,)), _limb_spec((1,)),
             _limb_spec((1,)),
         ]
-    # bit-reversal index vectors are shared across the grid (replicated blocks)
-    brev_r = fc.col.brev
-    brev_c = fc.brev_c
-    specs += [pl.BlockSpec((R,), lambda p, i: (0,)),
-              pl.BlockSpec((C,), lambda p, i: (0,))]
     return pl.pallas_call(
         body,
         grid=grid,
         in_specs=specs,
-        out_specs=pl.BlockSpec((1, 1, N), lambda p, i: (p, i, 0)),
+        out_specs=x_spec,
         out_shape=out_shape,
         interpret=interpret,
-    )(*operands, brev_r, brev_c)
+    )(x, *tables)

@@ -15,24 +15,30 @@ def default_submodules(N: int) -> int:
 
 
 def ntt_fwd(x, basis: tuple[int, ...], R: int | None = None,
-            interpret: bool = True):
-    """Forward negacyclic NTT of (P, ℓ, N) u32 via the Pallas kernel."""
+            interpret: bool = True, limbs_per_block: int | None = None):
+    """Forward negacyclic NTT of (P, ℓ, N) u32 via the Pallas kernel.
+
+    ``limbs_per_block`` batches that many limbs into one grid program
+    (rounded down to a divisor of ℓ; default 4) — small polynomials amortize
+    per-program overhead across limbs.
+    """
     R = R or default_submodules(x.shape[-1])
     return ntt_pallas(x, R=R, basis=tuple(basis), forward=True,
-                      interpret=interpret)
+                      interpret=interpret, limbs_per_block=limbs_per_block)
 
 
 def ntt_inv(x, basis: tuple[int, ...], R: int | None = None,
-            interpret: bool = True):
+            interpret: bool = True, limbs_per_block: int | None = None):
     R = R or default_submodules(x.shape[-1])
     return ntt_pallas(x, R=R, basis=tuple(basis), forward=False,
-                      interpret=interpret)
+                      interpret=interpret, limbs_per_block=limbs_per_block)
 
 
-def lower_tpu(x_shape, basis: tuple[int, ...], R: int, forward: bool = True):
+def lower_tpu(x_shape, basis: tuple[int, ...], R: int, forward: bool = True,
+              limbs_per_block: int | None = None):
     """Lower (no execute) the kernel for inspection/benchmarks."""
     import jax.numpy as jnp
     spec = jax.ShapeDtypeStruct(x_shape, jnp.uint32)
     fn = lambda x: ntt_pallas(x, R=R, basis=tuple(basis), forward=forward,
-                              interpret=True)
+                              interpret=True, limbs_per_block=limbs_per_block)
     return jax.jit(fn).lower(spec)

@@ -1,0 +1,184 @@
+"""Fast-path NTT coverage (EXPERIMENTS.md §Perf): the gather-free/lazy
+transforms must match the naive big-int oracle AND the pre-overhaul eager
+path bit-for-bit, lazy-reduction intermediates must stay below 2q, and the
+batched Pallas grid must be invariant in ``limbs_per_block``."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import const_cache, modmath as mm, ntt as nttm, rns
+from repro.kernels.ntt import ops as ntt_ops, ref as ntt_ref
+
+
+def rand_limbs(basis, N, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.stack([rng.integers(0, q, N, dtype=np.int64).astype(np.uint32)
+                     for q in basis])
+
+
+# ------------------------------------------------------- lazy modmath bounds
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_lazy_ops_stay_below_2q(seed):
+    """addmod/submod_lazy: [0,2q)² → [0,2q); shoup_lazy: any u32 → [0,2q)."""
+    rng = np.random.default_rng(seed)
+    q = int(rns.gen_ntt_primes(1, 1 << 10)[0])
+    qv = jnp.uint32(q)
+    two_q = jnp.uint32(2 * q)
+    a = jnp.asarray(rng.integers(0, 2 * q, 4096, dtype=np.int64).astype(np.uint32))
+    b = jnp.asarray(rng.integers(0, 2 * q, 4096, dtype=np.int64).astype(np.uint32))
+    s = np.asarray(mm.addmod_lazy(a, b, two_q)).astype(np.uint64)
+    d = np.asarray(mm.submod_lazy(a, b, two_q)).astype(np.uint64)
+    assert (s < 2 * q).all() and (d < 2 * q).all()
+    # exactness vs python ints
+    an, bn = np.asarray(a, dtype=np.uint64), np.asarray(b, dtype=np.uint64)
+    np.testing.assert_array_equal(s % q, (an + bn) % q)
+    np.testing.assert_array_equal(d % q, (an + 4 * q - bn) % q)
+    # shoup_lazy accepts the FULL u32 range, not just [0, 2q)
+    x = jnp.asarray(rng.integers(0, 1 << 32, 4096, dtype=np.int64).astype(np.uint32))
+    w = int(rng.integers(1, q))
+    ws = rns.shoup(w, q)
+    r = np.asarray(mm.mulmod_shoup_lazy(x, jnp.uint32(w), jnp.uint32(ws), qv))
+    assert (r.astype(np.uint64) < 2 * q).all()
+    np.testing.assert_array_equal(r.astype(np.uint64) % q,
+                                  np.asarray(x, dtype=np.uint64) * w % q)
+    full = np.asarray(mm.mulmod_shoup(x, jnp.uint32(w), jnp.uint32(ws), qv))
+    np.testing.assert_array_equal(full, r.astype(np.uint64) % q)
+
+
+@pytest.mark.parametrize("N", [64, 256, 1024])
+def test_ntt_lazy_intermediates_below_2q(N):
+    """The lazy forward keeps every output strictly below 2q (the invariant
+    the final reduce_once pass relies on)."""
+    basis = tuple(rns.gen_ntt_primes(3, N))
+    c = nttm.stacked_ntt_consts(basis, N)
+    x = rand_limbs(basis, N, seed=N)
+    lazy = np.asarray(nttm._ntt_lazy(jnp.asarray(x), c)).astype(np.uint64)
+    qs = np.array(basis, dtype=np.uint64).reshape(-1, 1)
+    assert (lazy < 2 * qs).all()
+    np.testing.assert_array_equal(
+        np.asarray(mm.reduce_once(jnp.asarray(lazy.astype(np.uint32)),
+                                  jnp.asarray(c.q))),
+        np.asarray(nttm.ntt(jnp.asarray(x), c)))
+
+
+# -------------------------------------------- fast path vs eager path vs oracle
+
+@pytest.mark.parametrize("N", [16, 64, 256])
+def test_fast_matches_eager_and_naive(N):
+    basis = tuple(rns.gen_ntt_primes(2, N))
+    c = nttm.stacked_ntt_consts(basis, N)
+    x = rand_limbs(basis, N, seed=N + 7)
+    fast = np.asarray(nttm.ntt(jnp.asarray(x), c))
+    eager = np.asarray(nttm.ntt_eager(jnp.asarray(x), c))
+    np.testing.assert_array_equal(fast, eager)
+    for i, q in enumerate(basis):
+        np.testing.assert_array_equal(fast[i], nttm.naive_ntt(x[i], q, N))
+    # inverse: both paths invert the fast forward exactly
+    np.testing.assert_array_equal(
+        np.asarray(nttm.intt(jnp.asarray(fast), c)), x)
+    np.testing.assert_array_equal(
+        np.asarray(nttm.intt_eager(jnp.asarray(fast), c)), x)
+
+
+@pytest.mark.parametrize("N", [64, 256, 1024])
+def test_four_step_fast_matches_eager_every_split(N):
+    basis = tuple(rns.gen_ntt_primes(2, N))
+    c = nttm.stacked_ntt_consts(basis, N)
+    x = rand_limbs(basis, N, seed=N + 11)
+    want = np.asarray(nttm.ntt(jnp.asarray(x), c))
+    R = 2
+    while R <= N // 2:
+        fc = nttm.stacked_four_step_consts(basis, N, R)
+        fast = np.asarray(nttm.four_step_ntt(jnp.asarray(x), fc))
+        eager = np.asarray(nttm.four_step_ntt_eager(jnp.asarray(x), fc))
+        np.testing.assert_array_equal(fast, want, err_msg=f"R={R}")
+        np.testing.assert_array_equal(eager, want, err_msg=f"eager R={R}")
+        back = np.asarray(nttm.four_step_intt(jnp.asarray(fast), fc))
+        back_e = np.asarray(nttm.four_step_intt_eager(jnp.asarray(fast), fc))
+        np.testing.assert_array_equal(back, x, err_msg=f"inv R={R}")
+        np.testing.assert_array_equal(back_e, x, err_msg=f"inv eager R={R}")
+        R *= 2
+
+
+def test_bitrev_permute_is_the_gather():
+    for N in (2, 8, 64, 1024):
+        x = np.arange(3 * N, dtype=np.uint32).reshape(3, N)
+        brev = rns.bitrev_indices(N)
+        np.testing.assert_array_equal(np.asarray(nttm.bitrev_permute(x)),
+                                      x[:, brev])
+        # self-inverse
+        np.testing.assert_array_equal(
+            np.asarray(nttm.bitrev_permute(nttm.bitrev_permute(x))), x)
+
+
+# ------------------------------------------------------- batched Pallas grid
+
+def test_kernel_limbs_per_block_invariance():
+    N, ell = 128, 6
+    basis = tuple(rns.gen_ntt_primes(ell, N))
+    rng = np.random.default_rng(5)
+    x = np.stack([rand_limbs(basis, N, seed=s) for s in (1, 2)])
+    want = ntt_ref.ntt_ref(x, basis)
+    for lpb in (1, 2, 3, 4, 5, 6, None):
+        got = np.asarray(ntt_ops.ntt_fwd(jnp.asarray(x), basis,
+                                         limbs_per_block=lpb))
+        np.testing.assert_array_equal(got, want, err_msg=f"lpb={lpb}")
+        back = np.asarray(ntt_ops.ntt_inv(jnp.asarray(got), basis,
+                                          limbs_per_block=lpb))
+        np.testing.assert_array_equal(back, x, err_msg=f"inv lpb={lpb}")
+
+
+def test_effective_limbs_per_block_divisor_fallback():
+    from repro.kernels.ntt.kernel import effective_limbs_per_block
+    assert effective_limbs_per_block(6, 4) == 3      # 4 ∤ 6 → largest ≤ 4
+    assert effective_limbs_per_block(6, 6) == 6
+    assert effective_limbs_per_block(7, 4) == 1      # prime ℓ
+    assert effective_limbs_per_block(8, None) == 4   # default block of 4
+    assert effective_limbs_per_block(2, 16) == 2     # clamped to ℓ
+
+
+@pytest.mark.parametrize("R", [4, 32])
+def test_kernel_R_sweep_lazy_vs_oracle(R):
+    N = 512
+    basis = tuple(rns.gen_ntt_primes(2, N))
+    x = np.stack([rand_limbs(basis, N, seed=R + 1)])
+    want = ntt_ref.ntt_ref(x, basis)
+    got = np.asarray(ntt_ops.ntt_fwd(jnp.asarray(x), basis, R=R))
+    np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------ device constant cache
+
+def test_device_const_cache_staged_once():
+    N = 64
+    basis = tuple(rns.gen_ntt_primes(2, N))
+    c1 = const_cache.device_ntt_consts(basis, N)
+    c2 = const_cache.device_ntt_consts(basis, N)
+    assert c1 is c2
+    assert isinstance(c1.psi_rev, jnp.ndarray)
+    fc1 = const_cache.device_four_step_consts(basis, N, 8)
+    fc2 = const_cache.device_four_step_consts(basis, N, 8)
+    assert fc1 is fc2
+    assert isinstance(fc1.row_stage, jnp.ndarray)
+    # the device copies compute exactly what the numpy-backed consts compute
+    x = rand_limbs(basis, N, seed=3)
+    np.testing.assert_array_equal(
+        np.asarray(nttm.ntt(jnp.asarray(x), c1)),
+        np.asarray(nttm.ntt(jnp.asarray(x), nttm.stacked_ntt_consts(basis, N))))
+
+
+def test_stage_major_row_tables_cover_all_stages():
+    """row_stage[m-1:2m-1] must equal the strided subsampling of row_pow."""
+    N, R = 256, 8
+    basis = tuple(rns.gen_ntt_primes(1, N))
+    fc = nttm.stacked_four_step_consts(basis, N, R)
+    C = fc.C
+    m = 1
+    while m < C:
+        stride = C // (2 * m)
+        np.testing.assert_array_equal(fc.row_stage[:, m - 1:2 * m - 1],
+                                      fc.row_pow[:, ::stride][:, :m])
+        np.testing.assert_array_equal(fc.row_stage_inv[:, m - 1:2 * m - 1],
+                                      fc.row_pow_inv[:, ::stride][:, :m])
+        m *= 2
