@@ -1,0 +1,190 @@
+"""Measured CPU micro-benchmarks for the BConv/key-switching hot path
+(EXPERIMENTS.md §Perf — key-switching).
+
+Compares the pre-overhaul eager path ("before": un-jitted jnp, full (K, ℓ, N)
+term tensor materialized, per-call ``jnp.asarray`` table staging) against the
+overhauled path ("after": jitted output-stationary Pallas BConvU kernel,
+leading-dim batched grid, const-cache device-resident tables) for
+
+  * the raw BConv at ModUp- and ModDown-shaped (src, dst) pairs,
+  * an end-to-end hybrid key-switch (ModUp → evk inner product → ModDown),
+
+verifies kernel-vs-exact-CRT-oracle equality across an (ℓ, K) sweep with
+batched leading dims, asserts the steady-state path performs ZERO per-call
+host→device table uploads, and records the deterministic op counts
+(``core/trace.py``) of a fixed key-switch workload.  The ``gate`` section is
+what CI's bench-regression check enforces against the committed
+``BENCH_bconv.json`` (wall-clock stays informational).
+
+    PYTHONPATH=src python -m benchmarks.bench_bconv [--quick] [--out PATH]
+"""
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_ntt import _rand, _time_pair
+from repro.core import bconv as bc
+from repro.core import const_cache, rns, trace
+
+DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_bconv.json"
+
+
+def _mixed_bases(ell: int, K: int, N: int):
+    dst = tuple(rns.gen_ntt_primes(K, N))
+    src = tuple(rns.gen_ntt_primes(ell, N, exclude=dst))
+    return src, dst
+
+
+def bench_raw(N: int, reps: int) -> list:
+    """Eager vs Pallas wall-clock at key-switching shapes, interleaved."""
+    out = []
+    for name, ell, K, B in (("modup", 8, 9, 1), ("moddown", 2, 8, 2)):
+        src, dst = _mixed_bases(ell, K, N)
+        x = _rand(src, N, seed=ell)
+        if B > 1:
+            x = jnp.stack([x] * B)
+        (e_med, e_min), (p_med, p_min) = _time_pair(
+            lambda a: bc.bconv_raw_eager(a, src, dst),
+            lambda a: bc._bconv_pallas(a, src, dst), x, reps=reps)
+        out.append({"case": name, "ell": ell, "K": K, "B": B,
+                    "us": {"before": e_med * 1e6, "after": p_med * 1e6,
+                           "before_min": e_min * 1e6, "after_min": p_min * 1e6},
+                    "speedup": e_med / p_med})
+    return out
+
+
+def _ks_setup(N: int, L: int, K: int, dnum: int):
+    from repro.core import keys, params as prm
+    from repro.core import poly as pl
+    p = prm.make_params(N=N, L=L, K=K, dnum=dnum)
+    ks = keys.keygen(p, seed=3)
+    rng = np.random.default_rng(7)
+    d = pl.uniform_poly(rng, p.q, N, pl.NTT)
+    return p, ks, d
+
+
+def bench_keyswitch(N: int, reps: int) -> dict:
+    """End-to-end hybrid KS (ModUp → inner product → ModDown), both engines."""
+    from repro.core import ckks
+    p, ks, d = _ks_setup(N, L=4, K=2, dnum=2)
+
+    def run(engine, x):
+        with bc.use_engine(engine):
+            return ckks.key_switch(x, ks.relin, p)[0].data
+
+    (e_med, e_min), (p_med, p_min) = _time_pair(
+        lambda x: run("eager", x), lambda x: run("pallas", x), d, reps=reps)
+    return {"N": N, "L": p.L, "K": p.K, "dnum": p.dnum,
+            "ms": {"before": e_med * 1e3, "after": p_med * 1e3,
+                   "before_min": e_min * 1e3, "after_min": p_min * 1e3},
+            "speedup": e_med / p_med}
+
+
+def verify_exact(sizes, quick: bool) -> dict:
+    """Kernel vs exact int64-CRT oracle, mixed bases × digit counts × batch."""
+    from repro.kernels.bconv import ops as bconv_ops, ref as bconv_ref
+    combos = [(2, 2), (4, 3), (6, 12), (8, 4)] if not quick else [(2, 2), (6, 12)]
+    report, all_ok = {}, True
+    for N in sizes:
+        cases = []
+        for ell, K in combos:
+            src, dst = _mixed_bases(ell, K, N)
+            x = np.stack([np.asarray(_rand(src, N, seed=s)) for s in (0, 1, 2)])
+            want = bconv_ref.bconv_ref(x, src, dst)
+            ok = True
+            for tile, block_b in ((256, 1), (N, 3), (2048, None)):
+                got = np.asarray(bconv_ops.bconv(jnp.asarray(x), src, dst,
+                                                 tile=tile, block_b=block_b))
+                ok &= bool(np.array_equal(got, want))
+            cases.append({"ell": ell, "K": K, "exact": ok})
+            all_ok &= ok
+        report[str(N)] = cases
+        print(f"oracle N={N}: {[(c['ell'], c['K'], c['exact']) for c in cases]}")
+    report["all_exact"] = all_ok
+    return report
+
+
+def steady_state_uploads(N: int) -> int:
+    """Host→device table staging events across a warm BConv/KS loop (want 0)."""
+    src, dst = _mixed_bases(4, 3, N)
+    x = _rand(src, N, seed=11)
+    jax.block_until_ready(bc.bconv_raw(x, src, dst))        # warm-up staging
+    before = const_cache.stage_events()
+    for _ in range(8):
+        jax.block_until_ready(bc.bconv_raw(x, src, dst))
+    return const_cache.stage_events() - before
+
+
+def trace_counts(N: int) -> dict:
+    """Deterministic op counts of one fixed hybrid key-switch (the CI gate)."""
+    from repro.core import ckks
+    p, ks, d = _ks_setup(N, L=4, K=2, dnum=2)
+    with trace.trace_ops() as t:
+        ckks.key_switch(d, ks.relin, p)
+    s = t.summary()
+    return {"bconv_macs": s["bconv_macs"], "limb_ntts": s["limb_ntts"],
+            "butterflies": s["butterflies"], "evk_bytes": s["evk_bytes"]}
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller oracle sweep and fewer reps")
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT,
+                    help="where to write BENCH_bconv.json")
+    args = ap.parse_args(argv if argv is not None else [])
+
+    N = 4096
+    reps = 3 if args.quick else 9
+    sizes = (4096,) if args.quick else (4096, 8192)
+
+    raw = bench_raw(N, reps)
+    keyswitch = bench_keyswitch(256, reps)
+    exact = verify_exact(sizes, args.quick)
+    uploads = steady_state_uploads(1024)
+    counts = trace_counts(256)
+
+    result = {
+        "bench": "bconv",
+        "N": N,
+        "config": {"quick": bool(args.quick), "reps": reps,
+                   "oracle_sizes": list(sizes)},
+        "raw": raw,
+        "keyswitch": keyswitch,
+        "oracle": exact,
+        "steady_state_table_uploads": uploads,
+        "trace_keyswitch_N256_L4_K2_dnum2": counts,
+        # deterministic regression gate — enforced by
+        # benchmarks/check_bench_regression.py in CI; numeric values must not
+        # grow versus the committed baseline, booleans must stay true.
+        "gate": {
+            "bconv_macs": counts["bconv_macs"],
+            "limb_ntts": counts["limb_ntts"],
+            "butterflies": counts["butterflies"],
+            "steady_state_table_uploads": uploads,
+            "oracle_exact": exact["all_exact"],
+        },
+    }
+    args.out.write_text(json.dumps(result, indent=2) + "\n")
+
+    print("name,case,metric,before,after,speedup")
+    for r in raw:
+        print(f"bconv,{r['case']},us,{r['us']['before']:.0f},"
+              f"{r['us']['after']:.0f},{r['speedup']:.2f}")
+    k = keyswitch
+    print(f"bconv,keyswitch,ms,{k['ms']['before']:.2f},"
+          f"{k['ms']['after']:.2f},{k['speedup']:.2f}")
+    print(f"bconv,steady-state,table-uploads,-,{uploads},-")
+    print(f"BENCH_bconv.json -> {args.out}")
+    return result
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

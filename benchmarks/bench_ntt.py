@@ -203,6 +203,14 @@ def main(argv=None) -> dict:
         "four_step": four_step,
         "kernel": kernel,
         "oracle": oracle,
+        # deterministic regression gate — enforced by
+        # benchmarks/check_bench_regression.py in CI; numeric values must not
+        # grow versus the committed baseline, booleans must stay true.
+        "gate": {
+            "selects_per_transform": op_counts(N)["selects_after"],
+            "gathers_per_transform": op_counts(N)["gathers_after"],
+            "oracle_exact": all(v["exact"] for v in oracle.values()),
+        },
     }
     args.out.write_text(json.dumps(result, indent=2) + "\n")
 

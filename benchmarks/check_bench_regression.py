@@ -1,0 +1,76 @@
+"""CI bench-regression gate: compare a fresh BENCH_*.json against the
+committed baseline and fail on deterministic regressions.
+
+Every bench emits a ``gate`` object of deterministic values:
+
+  * numeric fields are op counts (selects per transform, BConv MACs, limb
+    NTTs, staging events, …) — the candidate must be **≤** the baseline
+    (lower is an improvement and is reported, silently growing is a
+    regression and fails);
+  * boolean fields are invariants (kernel-vs-oracle exactness) — the
+    candidate must be ``true``.
+
+Wall-clock numbers are deliberately NOT gated: CI runners are noisy-neighbour
+machines, so timing lives in the artifact for trend inspection only.
+
+    python -m benchmarks.check_bench_regression \
+        --baseline BENCH_ntt.json --candidate /tmp/BENCH_ntt.json \
+        --baseline BENCH_bconv.json --candidate /tmp/BENCH_bconv.json
+"""
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def check_pair(baseline: Path, candidate: Path) -> list[str]:
+    base = json.loads(baseline.read_text())
+    cand = json.loads(candidate.read_text())
+    errors = []
+    bgate, cgate = base.get("gate"), cand.get("gate")
+    if bgate is None:
+        return [f"{baseline}: no 'gate' section — regenerate the baseline"]
+    if cgate is None:
+        return [f"{candidate}: no 'gate' section — bench did not emit one"]
+    name = base.get("bench", baseline.name)
+    for key, bval in bgate.items():
+        if key not in cgate:
+            errors.append(f"[{name}] gate key {key!r} missing from candidate")
+            continue
+        cval = cgate[key]
+        if isinstance(bval, bool):
+            if cval is not True:
+                errors.append(f"[{name}] {key}: expected true, got {cval}")
+        elif cval > bval:
+            errors.append(f"[{name}] {key}: {cval} > baseline {bval}")
+        elif cval < bval:
+            print(f"[{name}] {key}: improved {bval} -> {cval} "
+                  "(commit the new baseline to lock it in)")
+    for key in cgate:
+        if key not in bgate:
+            print(f"[{name}] new gate key {key!r} (not yet in baseline)")
+    if not errors:
+        print(f"[{name}] gate OK ({len(bgate)} checks)")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", action="append", type=Path, required=True,
+                    help="committed BENCH_*.json (repeatable, paired in order)")
+    ap.add_argument("--candidate", action="append", type=Path, required=True,
+                    help="freshly produced BENCH_*.json (repeatable)")
+    args = ap.parse_args(argv)
+    if len(args.baseline) != len(args.candidate):
+        print("--baseline and --candidate must be paired", file=sys.stderr)
+        return 2
+    errors = []
+    for b, c in zip(args.baseline, args.candidate):
+        errors += check_pair(b, c)
+    for e in errors:
+        print(f"REGRESSION: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,20 +7,34 @@ table (the paper's systolic BConvU).  This module implements it HPS-style
 (approximate: result may carry +u·Q for small u ≤ ℓ/2, absorbed by the
 key-switching noise budget — the standard choice in SEAL/Lattigo and ARK).
 
-The accumulation strategy mirrors what the Pallas kernel does on TPU: per-term
-Shoup products reduced to [0, q), then a **lazy 16-bit-column sum** (split each
-term into hi16/lo16, sum columns in u32 — exact for ℓ < 2¹⁶ — recombine into a
-64-bit (hi, lo) pair, one Barrett reduction at the end).
+Engine selection (EXPERIMENTS.md §Perf — key-switching):
+
+* ``"pallas"`` (default) — :func:`bconv_raw` routes the table matmul through
+  the output-stationary Pallas BConvU kernel
+  (:mod:`repro.kernels.bconv.kernel`), batching all leading dims (ciphertext
+  components × stacked key-switching accumulators) into ONE grid launch.
+  Tables and per-dst Barrett constants are device-resident via
+  :func:`repro.core.const_cache.device_bconv_consts` — zero per-call
+  host→device uploads on the steady-state path.
+* ``"eager"`` — the plain-jnp path (:func:`bconv_raw_eager`), kept bit-exact
+  as the parity/benchmark baseline and as the engine under an active
+  ``mapping_scope`` (sharding constraints apply to its intermediate tensors).
+
+Both engines share the identical accumulation strategy: per-term Shoup
+products reduced to [0, q), then a **lazy 16-bit-column sum** (split each
+term into hi16/lo16, sum columns in u32 — exact for ℓ < 2¹⁶ — recombine into
+a 64-bit (hi, lo) pair, one Barrett reduction at the end).
 """
 from __future__ import annotations
 
 import functools as _functools
+import os as _os
 
 import jax.numpy as jnp
 import numpy as np
 
+from . import const_cache
 from . import modmath as mm
-from . import ntt as nttm
 from . import poly as pl
 from . import rns
 from . import trace
@@ -56,10 +70,57 @@ def _constrain(x, spec_fn):
     if scope is None:
         return x
     import jax
-    from jax.sharding import NamedSharding
+    from jax.sharding import NamedSharding, PartitionSpec
     mesh, policy = scope
-    return jax.lax.with_sharding_constraint(
-        x, NamedSharding(mesh, spec_fn(policy, mesh)))
+    spec = spec_fn(policy, mesh)
+    # the policy specs are written rank-2 (limb, coef); anchor them to the
+    # TRAILING dims so batched leading axes (stacked ciphertext components)
+    # stay replicated instead of silently absorbing the mesh axes.
+    extra = x.ndim - len(spec)
+    if extra > 0:
+        spec = PartitionSpec(*([None] * extra + list(spec)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ----------------------------------------------------------------------------
+# Engine selection
+# ----------------------------------------------------------------------------
+
+_ENGINES = ("pallas", "eager")
+_engine = _os.environ.get("REPRO_BCONV_ENGINE", "pallas")
+if _engine not in _ENGINES:
+    raise ValueError(
+        f"REPRO_BCONV_ENGINE={_engine!r} — must be one of {_ENGINES}")
+
+
+def get_engine() -> str:
+    return _engine
+
+
+def set_engine(name: str) -> None:
+    """Select the BConv engine globally ("pallas" | "eager")."""
+    global _engine
+    if name not in _ENGINES:
+        raise ValueError(f"unknown BConv engine {name!r} — one of {_ENGINES}")
+    _engine = name
+
+
+class use_engine:
+    """Context manager pinning the BConv engine (parity tests, benchmarks)."""
+
+    def __init__(self, name: str):
+        if name not in _ENGINES:
+            raise ValueError(f"unknown BConv engine {name!r} — one of {_ENGINES}")
+        self.name = name
+
+    def __enter__(self):
+        self._saved = _engine
+        set_engine(self.name)
+        return self
+
+    def __exit__(self, *exc):
+        set_engine(self._saved)
+        return False
 
 
 def lazy_sum_mod(terms, q, mu_hi, mu_lo, axis: int):
@@ -75,14 +136,39 @@ def lazy_sum_mod(terms, q, mu_hi, mu_lo, axis: int):
     return mm.barrett_reduce_wide(hi, lo, q, mu_hi, mu_lo)
 
 
+def _record(x, src, dst):
+    count = int(np.prod(x.shape[:-2])) if x.ndim > 2 else 1
+    trace.record("bconv_mul", len(src) * len(dst), x.shape[-1], count)
+    trace.record("bconv_in", len(src), x.shape[-1], count)
+    trace.record("bconv_out", len(dst), x.shape[-1], count)
+
+
 def bconv_raw(x, src: tuple[int, ...], dst: tuple[int, ...]):
-    """(…, ℓ, N) coeff-domain residues in ``src`` → (…, K, N) in ``dst``."""
-    trace.record("bconv_mul", len(src) * len(dst), x.shape[-1])
-    trace.record("bconv_in", len(src), x.shape[-1])
-    trace.record("bconv_out", len(dst), x.shape[-1])
-    tab = rns.bconv_tables(tuple(src), tuple(dst))
-    cs = pl.consts(tuple(src), x.shape[-1])
-    cd = pl.consts(tuple(dst), x.shape[-1])
+    """(…, ℓ, N) coeff-domain residues in ``src`` → (…, K, N) in ``dst``.
+
+    Dispatches to the Pallas BConvU kernel by default (all leading dims
+    batched into one grid); falls back to the jnp path under an active
+    ``mapping_scope`` or when the engine is pinned to "eager".
+    """
+    src, dst = tuple(src), tuple(dst)
+    if _engine == "eager" or _active_policy.get() is not None:
+        return bconv_raw_eager(x, src, dst)
+    _record(x, src, dst)
+    return _bconv_pallas(x, src, dst)
+
+
+def _bconv_pallas(x, src: tuple[int, ...], dst: tuple[int, ...]):
+    from repro.kernels.bconv import ops as bconv_ops
+    return bconv_ops.bconv(x, src, dst)
+
+
+def bconv_raw_eager(x, src: tuple[int, ...], dst: tuple[int, ...]):
+    """The plain-jnp BConv (parity baseline; engine under mapping_scope)."""
+    src, dst = tuple(src), tuple(dst)
+    _record(x, src, dst)
+    tab = rns.bconv_tables(src, dst)
+    cs = pl.consts(src, x.shape[-1])
+    cd = pl.consts(dst, x.shape[-1])
     # step 1: t_i = x_i · q̂_i⁻¹ mod q_i (limb-wise Shoup constant)
     t = mm.mulmod_shoup(x, jnp.asarray(tab.qhat_inv)[:, None],
                         jnp.asarray(tab.qhat_inv_shoup)[:, None], cs.q)
@@ -107,19 +193,20 @@ def centered_lift_single(x, src_q: int, dst: tuple[int, ...]):
 
     Used by bootstrapping's ModRaise (u = 0 case of BConv): values in
     [0, q₁) are centered to (-q₁/2, q₁/2] and embedded exactly mod each dst
-    prime.  x: (…, N) u32 → (…, K, N).
+    prime.  x: (…, N) u32 → (…, K, N).  Vectorized over the dst axis with a
+    staged (K, 1) prime vector — one broadcast where-chain instead of one
+    chain per prime.
     """
-    half = jnp.uint32(src_q // 2)
-    is_neg = x > half                                   # maps to negative lift
-    mag_neg = jnp.uint32(src_q) - x                     # |value| when negative
-    outs = []
-    for p in dst:
-        pos = jnp.where(x >= jnp.uint32(p), x % jnp.uint32(p), x) if src_q >= p else x
-        neg = jnp.uint32(p) - jnp.where(
-            mag_neg >= jnp.uint32(p), mag_neg % jnp.uint32(p), mag_neg)
-        neg = jnp.where(neg == jnp.uint32(p), jnp.uint32(0), neg)
-        outs.append(jnp.where(is_neg, neg, pos))
-    return jnp.stack(outs, axis=-2)
+    pv = const_cache.device_table(
+        ("centered_lift", tuple(dst)),
+        lambda: np.array(dst, dtype=np.uint32).reshape(-1, 1))
+    xe = x[..., None, :]                               # (…, 1, N) vs (K, 1)
+    is_neg = xe > jnp.uint32(src_q // 2)               # maps to negative lift
+    mag_neg = jnp.uint32(src_q) - xe                   # |value| when negative
+    pos = xe % pv
+    neg_mag = mag_neg % pv
+    neg = jnp.where(neg_mag == 0, jnp.uint32(0), pv - neg_mag)
+    return jnp.where(is_neg, neg, pos)
 
 
 # ----------------------------------------------------------------------------
@@ -132,24 +219,34 @@ def mod_up_digit(digit: pl.RnsPoly, full_q: tuple[int, ...],
     """Digit limbs (coeff domain, basis Q_j) → basis Q_ℓ ∪ P (NTT domain).
 
     Limbs already present in Q_j are reused from ``digit_ntt`` (the original
-    NTT-domain data) — only the BConv-produced limbs pay an NTT.  The output
-    limb order is q₁..q_ℓ then p₁..p_K.
+    NTT-domain data) — only the BConv-produced limbs pay an NTT, and the whole
+    chain (BConv kernel output → forward NTT → limb reorder) stays device
+    resident.  The output limb order is q₁..q_ℓ then p₁..p_K, assembled by a
+    single staged index permutation over [digit | conv] instead of a per-limb
+    Python stack.
     """
     dst_other = tuple(q for q in full_q if q not in digit.basis) + tuple(p)
     conv = bconv_raw(digit.data, digit.basis, dst_other)
     conv_ntt = pl.RnsPoly(conv, dst_other, pl.COEFF).to_ntt()
     if digit_ntt is None:
         digit_ntt = digit.to_ntt()
-    rows = []
-    it = iter(range(len(dst_other)))
-    for q in full_q:
-        if q in digit.basis:
-            rows.append(digit_ntt.data[..., digit.basis.index(q), :])
-        else:
-            rows.append(conv_ntt.data[..., next(it), :])
-    for _ in p:
-        rows.append(conv_ntt.data[..., next(it), :])
-    return pl.RnsPoly(jnp.stack(rows, axis=-2), tuple(full_q) + tuple(p), pl.NTT)
+    nd = len(digit.basis)
+
+    def build_perm():
+        order = []
+        it = iter(range(len(dst_other)))
+        for q in full_q:
+            order.append(digit.basis.index(q) if q in digit.basis
+                         else nd + next(it))
+        for _ in p:
+            order.append(nd + next(it))
+        return np.array(order, dtype=np.int32)
+
+    perm = const_cache.device_table(
+        ("modup_perm", digit.basis, tuple(full_q), tuple(p)), build_perm)
+    stacked = jnp.concatenate([digit_ntt.data, conv_ntt.data], axis=-2)
+    return pl.RnsPoly(jnp.take(stacked, perm, axis=-2),
+                      tuple(full_q) + tuple(p), pl.NTT)
 
 
 def mod_down(x: pl.RnsPoly, q_basis: tuple[int, ...],
@@ -157,7 +254,9 @@ def mod_down(x: pl.RnsPoly, q_basis: tuple[int, ...],
     """⌊x / P⌉ : basis Q∪P (NTT domain) → basis Q (NTT domain).
 
     x is split into its P-part (iNTT → BConv into Q → NTT) which is subtracted,
-    then multiplied by P⁻¹ mod q_i.
+    then multiplied by P⁻¹ mod q_i.  Leading dims of ``x`` (e.g. both
+    key-switching accumulators stacked by ``ks_inner``) ride through every
+    step — including the BConv kernel's batch grid — in one dispatch.
     """
     ellq = len(q_basis)
     assert x.basis == tuple(q_basis) + tuple(p) and x.domain == pl.NTT

@@ -26,7 +26,6 @@ cutting evk HBM traffic by the giant count at equal KS count.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import numpy as np
 import jax.numpy as jnp
@@ -246,14 +245,13 @@ def mod_raise(ct: ckks.Ciphertext, params: CkksParams) -> ckks.Ciphertext:
     assert ct.level == 1, "bootstrap expects a level-1 (exhausted) ciphertext"
     basis = params.q
     q1 = ct.basis[0]
-
-    def raise_poly(p: pl.RnsPoly) -> pl.RnsPoly:
-        x = p.to_coeff().data[..., 0, :]
-        lifted = bc.centered_lift_single(x, q1, basis)
-        return pl.RnsPoly(lifted, basis, pl.COEFF)
-
+    # both components stacked → ONE vectorized centered lift over (2, N)
+    x = jnp.stack([ct.a.to_coeff().data[..., 0, :],
+                   ct.b.to_coeff().data[..., 0, :]])
+    lifted = bc.centered_lift_single(x, q1, basis)
     trace.record_he("ModRaise")
-    return ckks.Ciphertext(raise_poly(ct.a), raise_poly(ct.b), ct.scale)
+    return ckks.Ciphertext(pl.RnsPoly(lifted[0], basis, pl.COEFF),
+                           pl.RnsPoly(lifted[1], basis, pl.COEFF), ct.scale)
 
 
 def coeff_to_slot(ct, ctx: BootContext):

@@ -12,7 +12,6 @@ decomposition-reuse that the paper's minimum-key-switching (§V-B) builds on.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 
 import jax.numpy as jnp
@@ -26,21 +25,12 @@ from .keys import Ciphertext, EvalKey, KeySet
 from .params import CkksParams
 
 
-def _take_limbs(x: pl.RnsPoly, idx: list[int], new_basis: tuple[int, ...]) -> pl.RnsPoly:
-    data = jnp.take(x.data, jnp.asarray(np.array(idx, dtype=np.int32)), axis=-2)
-    return pl.RnsPoly(data, new_basis, x.domain)
-
-
 def _evk_at_level(evk: EvalKey, params: CkksParams,
                   ell: int) -> list[tuple[pl.RnsPoly, pl.RnsPoly]]:
-    """Slice each digit key to the current basis Q_ℓ ∪ P."""
-    idx = list(range(ell)) + [params.L + k for k in range(params.K)]
+    """Slice each digit key to the current basis Q_ℓ ∪ P (cached per level)."""
+    idx = tuple(range(ell)) + tuple(params.L + k for k in range(params.K))
     basis = params.q[:ell] + params.p
-    out = []
-    ndig = len(params.digit_bases(ell))
-    for aj, bj in zip(evk.a()[:ndig], evk.b[:ndig]):
-        out.append((_take_limbs(aj, idx, basis), _take_limbs(bj, idx, basis)))
-    return out
+    return evk.at_level(idx, basis, len(params.digit_bases(ell)))
 
 
 # ----------------------------------------------------------------------------
@@ -81,8 +71,12 @@ def ks_inner(exts: list[pl.RnsPoly], evk: EvalKey, params: CkksParams,
         ta, tb = ext * aj, ext * bj
         acc_a = ta if acc_a is None else acc_a + ta
         acc_b = tb if acc_b is None else acc_b + tb
-    ka = bc.mod_down(acc_a, params.q[:ell], params.p)
-    kb = bc.mod_down(acc_b, params.q[:ell], params.p)
+    # both components stacked on a leading axis → ONE ModDown (iNTT, BConv
+    # kernel grid, NTT, P⁻¹ scale all batched over the pair)
+    acc = pl.RnsPoly(jnp.stack([acc_a.data, acc_b.data]), acc_a.basis, pl.NTT)
+    k = bc.mod_down(acc, params.q[:ell], params.p)
+    ka = pl.RnsPoly(k.data[0], k.basis, k.domain)
+    kb = pl.RnsPoly(k.data[1], k.basis, k.domain)
     return ka, kb
 
 
@@ -337,16 +331,17 @@ def _rescale_once(a: pl.RnsPoly, b: pl.RnsPoly, scale: float):
     ql = basis[-1]
     new_basis = basis[:-1]
     qinv = _rescale_qinv(basis)
-
-    def drop(x: pl.RnsPoly) -> pl.RnsPoly:
-        xn = x.to_ntt()
-        last = pl.RnsPoly(xn.data[..., -1:, :], (ql,), pl.NTT).to_coeff()
-        lifted = bc.centered_lift_single(last.data[..., 0, :], ql, new_basis)
-        lifted_ntt = pl.RnsPoly(lifted, new_basis, pl.COEFF).to_ntt()
-        head = pl.RnsPoly(xn.data[..., :-1, :], new_basis, pl.NTT)
-        return (head - lifted_ntt).mul_scalar(qinv)
-
-    return drop(a), drop(b), scale / ql
+    # both ciphertext components ride one leading axis: the top-limb iNTT,
+    # the vectorized centered lift, the re-NTT, and the q_ℓ⁻¹ scale each
+    # dispatch once for the pair.
+    xn = jnp.stack([a.to_ntt().data, b.to_ntt().data])
+    last = pl.RnsPoly(xn[..., -1:, :], (ql,), pl.NTT).to_coeff()
+    lifted = bc.centered_lift_single(last.data[..., 0, :], ql, new_basis)
+    lifted_ntt = pl.RnsPoly(lifted, new_basis, pl.COEFF).to_ntt()
+    head = pl.RnsPoly(xn[..., :-1, :], new_basis, pl.NTT)
+    out = (head - lifted_ntt).mul_scalar(qinv)
+    return (pl.RnsPoly(out.data[0], new_basis, pl.NTT),
+            pl.RnsPoly(out.data[1], new_basis, pl.NTT), scale / ql)
 
 
 def level_drop(ct: Ciphertext, ell: int) -> Ciphertext:

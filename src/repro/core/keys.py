@@ -49,6 +49,7 @@ class EvalKey:
     b: list[pl.RnsPoly]              # dnum polys, NTT domain, basis Q_L∪P
     basis: tuple[int, ...]           # Q_L ∪ P
     _a_cache: list[pl.RnsPoly] | None = None
+    _level_cache: dict | None = None
 
     def a(self) -> list[pl.RnsPoly]:
         """Regenerate the a-halves from the seed (PRNG evk, §V-B)."""
@@ -57,6 +58,31 @@ class EvalKey:
             self._a_cache = [pl.uniform_poly(rng, self.basis, self.b[0].N, pl.NTT)
                              for _ in self.b]
         return self._a_cache
+
+    def at_level(self, idx: tuple[int, ...], level_basis: tuple[int, ...],
+                 ndig: int) -> list[tuple[pl.RnsPoly, pl.RnsPoly]]:
+        """Digit keys restricted to the limb set ``idx`` (basis Q_ℓ ∪ P).
+
+        Key-switching slices the same evk to the same level on every call;
+        the gathered device buffers are cached per (basis, ndig) so the
+        steady-state KS path re-slices nothing.  Bounded FIFO (the hot levels
+        of a computation are few) so long level-descending chains cannot pin
+        ~L copies of the key material in device memory.
+        """
+        if self._level_cache is None:
+            self._level_cache = {}
+        key = (level_basis, ndig)
+        out = self._level_cache.get(key)
+        if out is None:
+            take = jnp.asarray(np.array(idx, dtype=np.int32))
+            sl = lambda p: pl.RnsPoly(jnp.take(p.data, take, axis=-2),
+                                      level_basis, p.domain)
+            out = [(sl(aj), sl(bj))
+                   for aj, bj in zip(self.a()[:ndig], self.b[:ndig])]
+            if len(self._level_cache) >= 8:
+                self._level_cache.pop(next(iter(self._level_cache)))
+            self._level_cache[key] = out
+        return out
 
     def bytes_logical(self) -> int:
         n = sum(int(np.prod(p.data.shape)) for p in self.b) * 4

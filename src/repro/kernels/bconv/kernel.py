@@ -2,10 +2,10 @@
 
 The (K×ℓ)·(ℓ×N) modular matrix product (96 % of BConv, paper §II-C) is tiled
 
-    grid = (K, N / TILE)           # one dst prime × one coefficient tile
-    x     : BlockSpec (ℓ, TILE)    # all source limbs of the tile in VMEM
-    table : BlockSpec (1, ℓ)       # the dst prime's row of the BConv table
-    out   : BlockSpec (1, TILE)
+    grid = (B / BLOCK_B, K, N / TILE)   # batch block × dst prime × coeff tile
+    x     : BlockSpec (BLOCK_B, ℓ, TILE)  # all source limbs of the tile in VMEM
+    table : BlockSpec (1, ℓ)              # the dst prime's row of the BConv table
+    out   : BlockSpec (BLOCK_B, 1, TILE)
 
 Each program is *output-stationary*: it owns one output tile and loops the
 contraction (ℓ source limbs) in VREGs — the software analogue of CiFHER's
@@ -13,6 +13,13 @@ output-stationary MAC array (§III-A).  Accumulation is **lazy**: per-term
 Shoup products reduced to [0,q) are split into hi16/lo16 columns summed in
 u32 (exact for ℓ < 2¹⁶), with a single Barrett reduction at the end — one
 reduction per output instead of one per MAC.
+
+The leading ``B`` axis batches every independent BConv operand the caller has
+in flight — ciphertext components, stacked key-switching accumulators, digit
+polys of equal basis — into ONE grid launch, the dispatch-amortization
+analogue of the NTT kernel's flattened limb grid.  ``block_b`` groups several
+batch elements per program (table row and Barrett constants are loaded once
+per program, reused across the block).
 """
 from __future__ import annotations
 
@@ -25,44 +32,64 @@ from jax.experimental import pallas as pl
 from repro.core import modmath as mm
 
 
-def _body(ell, x_ref, tab_ref, tabs_ref, q_ref, mu_hi_ref, mu_lo_ref, o_ref):
+def effective_block_b(B: int, requested: int | None) -> int:
+    """Largest divisor of ``B`` that is ≤ the requested batch block (default 4)."""
+    requested = 4 if requested is None else max(1, requested)
+    b = min(requested, B)
+    while B % b:
+        b -= 1
+    return b
+
+
+def _body(ell, block_b, x_ref, tab_ref, tabs_ref, q_ref, mu_hi_ref, mu_lo_ref,
+          o_ref):
     q = q_ref[0, 0]
-    lo16 = jnp.zeros_like(o_ref[0])
-    hi16 = jnp.zeros_like(o_ref[0])
-    for i in range(ell):                      # static contraction loop
-        term = mm.mulmod_shoup(x_ref[i], tab_ref[0, i], tabs_ref[0, i], q)
-        lo16 += term & 0xFFFF
-        hi16 += term >> 16
-    lo = ((hi16 & 0xFFFF) << 16) + lo16
-    carry = (lo < lo16).astype(jnp.uint32)
-    hi = (hi16 >> 16) + carry
-    o_ref[0] = mm.barrett_reduce_wide(hi, lo, q, mu_hi_ref[0, 0], mu_lo_ref[0, 0])
+    for b in range(block_b):                  # static batch block
+        lo16 = jnp.zeros_like(o_ref[b, 0])
+        hi16 = jnp.zeros_like(o_ref[b, 0])
+        for i in range(ell):                  # static contraction loop
+            term = mm.mulmod_shoup(x_ref[b, i], tab_ref[0, i], tabs_ref[0, i], q)
+            lo16 += term & 0xFFFF
+            hi16 += term >> 16
+        lo = ((hi16 & 0xFFFF) << 16) + lo16
+        carry = (lo < lo16).astype(jnp.uint32)
+        hi = (hi16 >> 16) + carry
+        o_ref[b, 0] = mm.barrett_reduce_wide(hi, lo, q, mu_hi_ref[0, 0],
+                                             mu_lo_ref[0, 0])
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+@functools.partial(jax.jit, static_argnames=("tile", "block_b", "interpret"))
 def bconv_matmul_pallas(t, table, table_shoup, q_dst, mu_hi, mu_lo,
-                        *, tile: int = 2048, interpret: bool = True):
-    """t: (ℓ, N) pre-scaled source limbs; table: (K, ℓ) → out (K, N).
+                        *, tile: int = 2048, block_b: int | None = None,
+                        interpret: bool = True):
+    """t: (B, ℓ, N) or (ℓ, N) pre-scaled source limbs; table: (K, ℓ) → out
+    (B, K, N) (resp. (K, N)).
 
-    ``q_dst``/``mu_*``: (K, 1) per-dst-prime constants.
+    ``q_dst``/``mu_*``: (K, 1) per-dst-prime constants.  ``block_b`` batch
+    elements share one grid program (rounded down to a divisor of B).
     """
-    ell, N = t.shape
+    squeeze = t.ndim == 2
+    if squeeze:
+        t = t[None]
+    B, ell, N = t.shape
     K = table.shape[0]
     tile = min(tile, N)
     assert N % tile == 0
-    grid = (K, N // tile)
-    return pl.pallas_call(
-        functools.partial(_body, ell),
+    bb = effective_block_b(B, block_b)
+    grid = (B // bb, K, N // tile)
+    out = pl.pallas_call(
+        functools.partial(_body, ell, bb),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((ell, tile), lambda j, c: (0, c)),
-            pl.BlockSpec((1, ell), lambda j, c: (j, 0)),
-            pl.BlockSpec((1, ell), lambda j, c: (j, 0)),
-            pl.BlockSpec((1, 1), lambda j, c: (j, 0)),
-            pl.BlockSpec((1, 1), lambda j, c: (j, 0)),
-            pl.BlockSpec((1, 1), lambda j, c: (j, 0)),
+            pl.BlockSpec((bb, ell, tile), lambda b, j, c: (b, 0, c)),
+            pl.BlockSpec((1, ell), lambda b, j, c: (j, 0)),
+            pl.BlockSpec((1, ell), lambda b, j, c: (j, 0)),
+            pl.BlockSpec((1, 1), lambda b, j, c: (j, 0)),
+            pl.BlockSpec((1, 1), lambda b, j, c: (j, 0)),
+            pl.BlockSpec((1, 1), lambda b, j, c: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, tile), lambda j, c: (j, c)),
-        out_shape=jax.ShapeDtypeStruct((K, N), jnp.uint32),
+        out_specs=pl.BlockSpec((bb, 1, tile), lambda b, j, c: (b, j, c)),
+        out_shape=jax.ShapeDtypeStruct((B, K, N), jnp.uint32),
         interpret=interpret,
     )(t, table, table_shoup, q_dst, mu_hi, mu_lo)
+    return out[0] if squeeze else out

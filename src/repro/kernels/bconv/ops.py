@@ -1,25 +1,27 @@
 """Public BConv op: limb-wise q̂⁻¹ scaling + the Pallas table-matmul kernel."""
 from __future__ import annotations
 
-import jax.numpy as jnp
-import numpy as np
-
+from repro.core import const_cache
 from repro.core import modmath as mm
-from repro.core import ntt as nttm
-from repro.core import rns
 
 
 def bconv(x, src: tuple[int, ...], dst: tuple[int, ...],
-          tile: int = 2048, interpret: bool = True):
-    """(ℓ, N) coeff-domain residues in ``src`` → (K, N) in ``dst`` (HPS)."""
+          tile: int = 2048, block_b: int | None = None,
+          interpret: bool = True):
+    """(…, ℓ, N) coeff-domain residues in ``src`` → (…, K, N) in ``dst`` (HPS).
+
+    All leading dims are flattened into the kernel's batch grid axis; every
+    table/constant is device-resident via
+    :func:`repro.core.const_cache.device_bconv_consts` (staged once per
+    (src, dst) — no per-call host→device uploads).
+    """
     from .kernel import bconv_matmul_pallas
     src, dst = tuple(src), tuple(dst)
-    tab = rns.bconv_tables(src, dst)
-    cs = nttm.stacked_ntt_consts(src, x.shape[-1])
-    cd = nttm.stacked_ntt_consts(dst, x.shape[-1])
-    t = mm.mulmod_shoup(x, jnp.asarray(tab.qhat_inv)[:, None],
-                        jnp.asarray(tab.qhat_inv_shoup)[:, None], cs.q)
-    return bconv_matmul_pallas(
-        t, jnp.asarray(tab.table), jnp.asarray(tab.table_shoup),
-        jnp.asarray(cd.q), jnp.asarray(cd.mu_hi), jnp.asarray(cd.mu_lo),
-        tile=min(tile, x.shape[-1]), interpret=interpret)
+    c = const_cache.device_bconv_consts(src, dst)
+    t = mm.mulmod_shoup(x, c.qhat_inv, c.qhat_inv_shoup, c.q_src)
+    lead = t.shape[:-2]
+    flat = t.reshape((-1,) + t.shape[-2:])
+    out = bconv_matmul_pallas(
+        flat, c.table, c.table_shoup, c.q_dst, c.mu_hi, c.mu_lo,
+        tile=min(tile, x.shape[-1]), block_b=block_b, interpret=interpret)
+    return out.reshape(lead + out.shape[-2:])

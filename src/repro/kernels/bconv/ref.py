@@ -7,7 +7,13 @@ from repro.core import rns
 
 
 def bconv_ref(x: np.ndarray, src: tuple[int, ...], dst: tuple[int, ...]) -> np.ndarray:
-    """Full HPS BConv: (ℓ, N) residues in ``src`` → (K, N) in ``dst``."""
+    """Full HPS BConv: (…, ℓ, N) residues in ``src`` → (…, K, N) in ``dst``.
+
+    Leading dims are looped host-side so the oracle stays a plain schoolbook
+    sum — it doubles as the reference for the kernel's batched grid.
+    """
+    if x.ndim > 2:
+        return np.stack([bconv_ref(xi, src, dst) for xi in x])
     tab = rns.bconv_tables(tuple(src), tuple(dst))
     ell, N = x.shape
     t = np.empty((ell, N), dtype=np.int64)

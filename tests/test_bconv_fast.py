@@ -1,0 +1,220 @@
+"""BConv hot-path coverage (EXPERIMENTS.md §Perf — key-switching): the Pallas
+BConvU engine must match the eager jnp path AND the exact int64-CRT oracle
+bit-for-bit across mixed bases and digit counts, results must be invariant in
+every tiling/batching knob, tables must stage to the device exactly once, and
+every key-switching call site (ModUp, ModDown, rescale, ModRaise) must
+dispatch identically under both engines."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bconv as bc
+from repro.core import const_cache, rns
+from repro.kernels.bconv import ops as bconv_ops, ref as bconv_ref
+from repro.kernels.bconv.kernel import effective_block_b
+
+
+def rand_limbs(basis, N, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.stack([rng.integers(0, q, N, dtype=np.int64).astype(np.uint32)
+                     for q in basis])
+
+
+def mixed_bases(ell, K, N):
+    dst = tuple(rns.gen_ntt_primes(K, N))
+    src = tuple(rns.gen_ntt_primes(ell, N, exclude=dst))
+    return src, dst
+
+
+# ------------------------------------------- engine parity vs exact oracle
+
+@pytest.mark.parametrize("ell,K", [(1, 2), (2, 2), (4, 3), (6, 12), (8, 4)])
+def test_pallas_vs_eager_vs_oracle(ell, K):
+    N = 256
+    src, dst = mixed_bases(ell, K, N)
+    x = rand_limbs(src, N, seed=ell * K + 1)
+    want = bconv_ref.bconv_ref(x, src, dst)
+    with bc.use_engine("pallas"):
+        got_p = np.asarray(bc.bconv_raw(jnp.asarray(x), src, dst))
+    with bc.use_engine("eager"):
+        got_e = np.asarray(bc.bconv_raw(jnp.asarray(x), src, dst))
+    np.testing.assert_array_equal(got_p, want)
+    np.testing.assert_array_equal(got_e, want)
+
+
+def test_bconv_raw_leading_dims_match_per_slice():
+    """(B₁, B₂, ℓ, N) batches must equal the per-slice 2-D results."""
+    N = 128
+    src, dst = mixed_bases(3, 4, N)
+    x = np.stack([[rand_limbs(src, N, seed=3 * i + j) for j in range(3)]
+                  for i in range(2)])
+    got = np.asarray(bc.bconv_raw(jnp.asarray(x), src, dst))
+    assert got.shape == (2, 3, len(dst), N)
+    for i in range(2):
+        for j in range(3):
+            np.testing.assert_array_equal(
+                got[i, j], bconv_ref.bconv_ref(x[i, j], src, dst))
+
+
+def test_hps_big_int_identity():
+    """out_j ≡ Σ_i [x_i·q̂_i⁻¹]_{q_i}·q̂_i  (mod p_j) — the HPS definition,
+    checked against Python big ints independently of both engines."""
+    N = 64
+    src, dst = mixed_bases(3, 2, N)
+    x = rand_limbs(src, N, seed=9)
+    tab = rns.bconv_tables(src, dst)
+    Q = 1
+    for q in src:
+        Q *= q
+    got = np.asarray(bc.bconv_raw(jnp.asarray(x), src, dst))
+    for n in range(0, N, 17):
+        v = sum(int(x[i, n]) * int(tab.qhat_inv[i]) % src[i] * (Q // src[i])
+                for i in range(len(src)))
+        for j, p in enumerate(dst):
+            assert int(got[j, n]) == v % p
+
+
+# ------------------------------------------------- tiling/batching invariance
+
+def test_batched_grid_invariance():
+    """Result independent of coefficient tile AND batch block size."""
+    N, B = 512, 6
+    src, dst = mixed_bases(4, 3, N)
+    x = np.stack([rand_limbs(src, N, seed=s) for s in range(B)])
+    want = bconv_ref.bconv_ref(x, src, dst)
+    for tile in (128, 256, N):
+        for block_b in (1, 2, 3, 6, 4, None):
+            got = np.asarray(bconv_ops.bconv(jnp.asarray(x), src, dst,
+                                             tile=tile, block_b=block_b))
+            np.testing.assert_array_equal(
+                got, want, err_msg=f"tile={tile} block_b={block_b}")
+
+
+def test_effective_block_b_divisor_fallback():
+    assert effective_block_b(6, 4) == 3       # 4 ∤ 6 → largest divisor ≤ 4
+    assert effective_block_b(6, 6) == 6
+    assert effective_block_b(7, 4) == 1       # prime B
+    assert effective_block_b(8, None) == 4    # default block of 4
+    assert effective_block_b(2, 16) == 2      # clamped to B
+
+
+# --------------------------------------------------- const-cache staging
+
+def test_bconv_consts_staged_once():
+    N = 128
+    src, dst = mixed_bases(2, 3, N)
+    c1 = const_cache.device_bconv_consts(src, dst)
+    c2 = const_cache.device_bconv_consts(src, dst)
+    assert c1 is c2
+    assert isinstance(c1.table, jnp.ndarray)
+    tab = rns.bconv_tables(src, dst)
+    np.testing.assert_array_equal(np.asarray(c1.table), tab.table)
+    np.testing.assert_array_equal(np.asarray(c1.qhat_inv).ravel(), tab.qhat_inv)
+    # Barrett split matches floor(2^62/p)
+    for j, p in enumerate(dst):
+        mu = (1 << 62) // p
+        assert int(c1.mu_hi[j, 0]) == mu >> 32
+        assert int(c1.mu_lo[j, 0]) == mu & 0xFFFFFFFF
+
+
+def test_steady_state_has_zero_table_uploads():
+    N = 256
+    src, dst = mixed_bases(3, 2, N)
+    x = jnp.asarray(rand_limbs(src, N, seed=4))
+    bc.bconv_raw(x, src, dst)              # warm-up stages everything
+    before = const_cache.stage_events()
+    for _ in range(4):
+        bc.bconv_raw(x, src, dst)
+    assert const_cache.stage_events() == before
+
+
+# ------------------------------------------------- vectorized centered lift
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_centered_lift_matches_scalar_reference(seed):
+    N = 128
+    src, dst = mixed_bases(1, 5, N)
+    q1 = src[0]
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, q1, N, dtype=np.int64).astype(np.uint32)
+    got = np.asarray(bc.centered_lift_single(jnp.asarray(x), q1, dst))
+    half = q1 // 2
+    centered = np.where(x > half, x.astype(np.int64) - q1, x.astype(np.int64))
+    want = np.stack([centered % p for p in dst]).astype(np.uint32)
+    np.testing.assert_array_equal(got, want)
+    # leading dims broadcast (ModRaise stacks both ciphertext components)
+    both = np.asarray(bc.centered_lift_single(
+        jnp.asarray(np.stack([x, x])), q1, dst))
+    assert both.shape == (2, len(dst), N)
+    np.testing.assert_array_equal(both[0], want)
+    np.testing.assert_array_equal(both[1], want)
+
+
+# ------------------------------------------- key-switching call-site parity
+
+@pytest.fixture(scope="module")
+def small_params():
+    from repro.core import keys, params as prm
+    p = prm.make_params(N=64, L=4, K=2, dnum=2)
+    ks = keys.keygen(p, seed=2)
+    return p, ks
+
+
+def _both_engines(fn):
+    with bc.use_engine("pallas"):
+        got_p = fn()
+    with bc.use_engine("eager"):
+        got_e = fn()
+    return got_p, got_e
+
+
+def test_mod_up_mod_down_engine_parity(small_params):
+    from repro.core import poly as pl
+    p, _ = small_params
+    rng = np.random.default_rng(5)
+    d = pl.uniform_poly(rng, p.q, p.N, pl.NTT)
+
+    def modup():
+        from repro.core import ckks
+        return [np.asarray(e.data) for e in ckks.mod_up_all_digits(d, p)]
+
+    up_p, up_e = _both_engines(modup)
+    for a, b in zip(up_p, up_e):
+        np.testing.assert_array_equal(a, b)
+
+    ext = pl.uniform_poly(rng, p.q + p.p, p.N, pl.NTT)
+    stacked = pl.RnsPoly(jnp.stack([ext.data, ext.data]), ext.basis, pl.NTT)
+
+    def moddown():
+        return np.asarray(bc.mod_down(stacked, p.q, p.p).data)
+
+    dn_p, dn_e = _both_engines(moddown)
+    np.testing.assert_array_equal(dn_p, dn_e)
+    # the stacked components stay independent: both rows identical inputs
+    np.testing.assert_array_equal(dn_p[0], dn_p[1])
+
+
+def test_key_switch_and_rescale_engine_parity(small_params):
+    from repro.core import ckks, poly as pl
+    p, ks = small_params
+    rng = np.random.default_rng(6)
+    d = pl.uniform_poly(rng, p.q, p.N, pl.NTT)
+
+    def switch():
+        ka, kb = ckks.key_switch(d, ks.relin, p)
+        return np.asarray(ka.data), np.asarray(kb.data)
+
+    (ka_p, kb_p), (ka_e, kb_e) = _both_engines(switch)
+    np.testing.assert_array_equal(ka_p, ka_e)
+    np.testing.assert_array_equal(kb_p, kb_e)
+
+    ct = ckks.Ciphertext(d, pl.uniform_poly(rng, p.q, p.N, pl.NTT),
+                         float(p.q[-1]))
+
+    def rs():
+        out = ckks.rescale(ct, p, times=1)
+        return np.asarray(out.a.data), np.asarray(out.b.data)
+
+    (a_p, b_p), (a_e, b_e) = _both_engines(rs)
+    np.testing.assert_array_equal(a_p, a_e)
+    np.testing.assert_array_equal(b_p, b_e)
