@@ -65,6 +65,12 @@ class mapping_scope:
         return False
 
 
+def policy_active() -> bool:
+    """True when a ``mapping_scope`` is active (callers that batch through
+    Pallas kernels fall back to the sharding-constrained eager paths)."""
+    return _active_policy.get() is not None
+
+
 def _constrain(x, spec_fn):
     scope = _active_policy.get()
     if scope is None:

@@ -129,8 +129,11 @@ def linear_transform(ct: ckks.Ciphertext, diags: dict[int, np.ndarray],
                      ctx: BootContext) -> ckks.Ciphertext:
     """out slots = M · slots, M given by its diagonals.  One rescale level.
 
-    Baby rotations are hoisted (single ModUp); giant steps use minimum
-    key-switching when enabled.
+    Double-hoisting: the baby rotations share one ModUp AND (fused engine)
+    collapse into a single AutoU∘KS kernel launch; the giant-step
+    accumulators batch their automorphisms + key-switches into one
+    ``hrot_many`` launch (non-min-KS) or fold serially with the single
+    evk_bs (minimum key-switching §V-B).
     """
     n, bs = ctx.slots, ctx.bs
     params, keys = ctx.params, ctx.keys
@@ -180,9 +183,13 @@ def linear_transform(ct: ckks.Ciphertext, diags: dict[int, np.ndarray],
         for g in range(n_giants - 2, -1, -1):
             out = ckks.hadd(inners[g], ckks.hrot(out, bs, keys))
     else:
+        # all giant-step rotations in ONE batched launch set (stacked ModUp,
+        # fused AutoU∘KS, stacked ModDown, multi-perm b-halves)
+        rotated = ckks.hrot_many(inners[1:],
+                                 [g * bs for g in range(1, n_giants)], keys)
         out = inners[0]
-        for g in range(1, n_giants):
-            out = ckks.hadd(out, ckks.hrot(inners[g], g * bs, keys))
+        for rg in rotated:
+            out = ckks.hadd(out, rg)
     return ckks.rescale(out, params, times=1)
 
 

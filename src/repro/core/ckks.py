@@ -13,6 +13,7 @@ decomposition-reuse that the paper's minimum-key-switching (§V-B) builds on.
 from __future__ import annotations
 
 import functools
+import os as _os
 
 import jax.numpy as jnp
 import numpy as np
@@ -23,6 +24,59 @@ from . import poly as pl
 from . import trace
 from .keys import Ciphertext, EvalKey, KeySet
 from .params import CkksParams
+
+
+# ----------------------------------------------------------------------------
+# Engine selection (EXPERIMENTS.md §Perf — rotations)
+#
+# * "fused" (default) — rotations dispatch to the fused AutoU∘KS Pallas
+#   kernel (the Galois permutation applied to each hoisted digit INSIDE the
+#   evk MAC accumulation, all rotations of a set in one launch) and HMult's
+#   tensor products route through the batched EFU kernel.
+# * "eager" — the per-rotation jnp path (permute every digit, then the
+#   RnsPoly inner product), kept bit-exact as the parity/benchmark baseline
+#   and the engine under an active ``mapping_scope``.
+# ----------------------------------------------------------------------------
+
+_ENGINES = ("fused", "eager")
+_engine = _os.environ.get("REPRO_CKKS_ENGINE", "fused")
+if _engine not in _ENGINES:
+    raise ValueError(
+        f"REPRO_CKKS_ENGINE={_engine!r} — must be one of {_ENGINES}")
+
+
+def get_engine() -> str:
+    return _engine
+
+
+def set_engine(name: str) -> None:
+    """Select the CKKS rotation/eltwise engine globally ("fused" | "eager")."""
+    global _engine
+    if name not in _ENGINES:
+        raise ValueError(f"unknown CKKS engine {name!r} — one of {_ENGINES}")
+    _engine = name
+
+
+class use_engine:
+    """Context manager pinning the CKKS engine (parity tests, benchmarks)."""
+
+    def __init__(self, name: str):
+        if name not in _ENGINES:
+            raise ValueError(f"unknown CKKS engine {name!r} — one of {_ENGINES}")
+        self.name = name
+
+    def __enter__(self):
+        self._saved = _engine
+        set_engine(self.name)
+        return self
+
+    def __exit__(self, *exc):
+        set_engine(self._saved)
+        return False
+
+
+def _use_fused() -> bool:
+    return _engine == "fused" and not bc.policy_active()
 
 
 def _evk_at_level(evk: EvalKey, params: CkksParams,
@@ -113,23 +167,43 @@ def padd(ct: Ciphertext, pt: pl.RnsPoly) -> Ciphertext:
     return Ciphertext(ct.a, ct.b.to_ntt() + pt.to_ntt(), ct.scale)
 
 
+def _tensor_products(a1: pl.RnsPoly, b1: pl.RnsPoly,
+                     a2: pl.RnsPoly, b2: pl.RnsPoly):
+    """HMult tensor product: d₀ = b₁b₂, d₁ = a₁b₂ + a₂b₁, d₂ = a₁a₂.
+
+    Fused engine: TWO batched EFU kernel launches — a stacked "mul" computes
+    (d₀, d₂) over one (2, ℓ, N) grid, the compound "mac" computes d₁ in one
+    pass (CiFHER §III-C's RF-round-trip cut) — instead of four per-limb
+    eltwise dispatch chains.  Eager: RnsPoly ops (bit-exact parity baseline).
+    """
+    if not _use_fused():
+        return b1 * b2, (a1 * b2) + (a2 * b1), a1 * a2
+    from repro.kernels.eltwise import ops as elt_ops
+    basis = a1.basis
+    trace.record("elt_mul", a1.ell, a1.N, 4)
+    prod = elt_ops.eltwise("mul", basis,
+                           jnp.stack([b1.data, a1.data]),
+                           jnp.stack([b2.data, a2.data]))
+    d1 = elt_ops.eltwise("mac", basis, a1.data, b2.data, a2.data, b1.data)
+    return (pl.RnsPoly(prod[0], basis, pl.NTT),
+            pl.RnsPoly(d1, basis, pl.NTT),
+            pl.RnsPoly(prod[1], basis, pl.NTT))
+
+
 def hmult(c1: Ciphertext, c2: Ciphertext, keys: KeySet) -> Ciphertext:
     """HMult = (a₁b₂+a₂b₁, b₁b₂) + KS(a₁a₂, evk_×); rescale NOT included."""
     trace.record_he("HMult")
     a1, b1 = c1.a.to_ntt(), c1.b.to_ntt()
     a2, b2 = c2.a.to_ntt(), c2.b.to_ntt()
-    d0 = b1 * b2
-    d1 = (a1 * b2) + (a2 * b1)
-    d2 = a1 * a2
+    d0, d1, d2 = _tensor_products(a1, b1, a2, b2)
     ka, kb = key_switch(d2, keys.relin, keys.params)
     return Ciphertext(d1 + ka, d0 + kb, c1.scale * c2.scale)
 
 
 def square(ct: Ciphertext, keys: KeySet) -> Ciphertext:
     a, b = ct.a.to_ntt(), ct.b.to_ntt()
-    d0 = b * b
-    d1 = (a * b) + (a * b)
-    ka, kb = key_switch(a * a, keys.relin, keys.params)
+    d0, d1, d2 = _tensor_products(a, b, a, b)
+    ka, kb = key_switch(d2, keys.relin, keys.params)
     return Ciphertext(d1 + ka, d0 + kb, ct.scale * ct.scale)
 
 
@@ -256,24 +330,106 @@ def _rot_by_gelt(ct: Ciphertext, g: int, keys: KeySet) -> Ciphertext:
     With this paper's convention (decrypt = b − a·s) the switched term enters
     with a minus sign: ct′ = (−ka, φ(b) − kb), since
     φ(v) = φ(b) − φ(a)·φ(s) and kb − ka·s ≈ φ(a)·φ(s).
+
+    The fused path permutes the hoisted digits *after* ModUp (inside the
+    AutoU∘KS kernel) and is bit-exact against ``hrot_hoisted_eager``; the
+    eager path permutes ``a`` *before* ModUp.  Both are valid key-switches of
+    the same plaintext rotation — they differ only in which multiple-of-Q the
+    approximate (HPS) BConv error term carries, absorbed by the KS noise
+    budget either way.
     """
-    perm = pl.automorphism_perm(ct.a.N, g)
-    a = ct.a.to_ntt().automorphism(perm)
-    b = ct.b.to_ntt().automorphism(perm)
+    if _use_fused():
+        return _rot_by_gelt_fused(ct, g, keys)
+    return _rot_by_gelt_eager(ct, g, keys)
+
+
+def _rot_by_gelt_eager(ct: Ciphertext, g: int, keys: KeySet) -> Ciphertext:
+    """Eager rotation: permute (a, b), then a full key-switch on φ(a)."""
+    a = ct.a.to_ntt().automorphism_by_gelt(g)
+    b = ct.b.to_ntt().automorphism_by_gelt(g)
     ka, kb = key_switch(a, keys.galois_key(g), keys.params)
     return Ciphertext(-ka, b - kb, ct.scale)
 
 
+def _rot_by_gelt_fused(ct: Ciphertext, g: int, keys: KeySet) -> Ciphertext:
+    """Fused rotation: ModUp of a (unpermuted), then the AutoU∘KS kernel
+    applies φ_g inside the evk MAC — no permuted digit ever materializes."""
+    a, b = ct.a.to_ntt(), ct.b.to_ntt()
+    exts = mod_up_all_digits(a, keys.params)
+    k = _fused_galois_ks(exts, (g,), keys, a.ell)
+    ka = pl.RnsPoly(k.data[0, 0], k.basis, k.domain)
+    kb = pl.RnsPoly(k.data[0, 1], k.basis, k.domain)
+    b_rot = _rotated_b(b, (g,))
+    diff = pl.RnsPoly(b_rot.data[0], b.basis, pl.NTT) - kb
+    return Ciphertext(-ka, diff, ct.scale)
+
+
 # -- hoisted rotations (decomposition reuse; basis of minimum-KS §V-B) --------
+
+def _fused_galois_ks(exts: list[pl.RnsPoly], gelts: tuple[int, ...],
+                     keys: KeySet, ell: int) -> pl.RnsPoly:
+    """Fused AutoU∘KS + one stacked ModDown for a whole rotation set.
+
+    ``exts``: the hoisted digit decompositions — each digit's data is (L, N)
+    (one shared ModUp, broadcast over the set) or (R, L, N) (one decomposition
+    per rotation — distinct ciphertexts batched by :func:`hrot_many`).
+    Returns the switched pairs as ONE RnsPoly with data (R, 2, ℓ, N): [r, 0]
+    is ka, [r, 1] is kb for rotation r.
+    """
+    from repro.kernels.automorphism import ops as auto_ops
+    params = keys.params
+    ext_basis = exts[0].basis
+    N = exts[0].N
+    J, L, R = len(exts), len(ext_basis), len(gelts)
+    stack = jnp.stack([e.data if e.data.ndim == 3 else e.data[None]
+                       for e in exts])                      # (J, G, L, N)
+    idx = tuple(range(ell)) + tuple(params.L + k for k in range(params.K))
+    ndig = len(params.digit_bases(ell))
+    evk_a, evk_b = keys.galois_stacked(gelts, idx, ext_basis, ndig)
+    trace.record("auto", L, N, J * R)            # digit permutations
+    trace.record("elt_mul", L, N, 2 * J * R)     # evk MAC products
+    for _ in gelts:
+        trace.record("evk_load_bytes", 1, J * L * N * 4)
+        trace.record_he("KS")
+    acc = auto_ops.auto_ks(stack, evk_a, evk_b, N, gelts, ext_basis)
+    # ONE ModDown for the whole set: every (rotation, component) pair rides
+    # the leading axes through the iNTT/BConv-kernel/NTT/P⁻¹ chain.
+    return bc.mod_down(pl.RnsPoly(acc, ext_basis, pl.NTT),
+                       params.q[:ell], params.p)
+
+
+def _rotated_b(b: pl.RnsPoly, gelts: tuple[int, ...]) -> pl.RnsPoly:
+    """φ_g(b) for every g in one multi-perm kernel launch.
+
+    ``b.data``: (ℓ, N) shared across the set, or (R, ℓ, N) one per rotation.
+    Returns an (R, ℓ, N) RnsPoly.
+    """
+    from repro.kernels.automorphism import ops as auto_ops
+    trace.record("auto", b.ell, b.N, len(gelts))
+    data = b.data if b.data.ndim == 3 else b.data[None]
+    return pl.RnsPoly(auto_ops.apply_galois_many(data, b.N, gelts),
+                      b.basis, pl.NTT)
+
 
 def hrot_hoisted(ct: Ciphertext, rotations: list[int],
                  keys: KeySet) -> list[Ciphertext]:
     """Rotate one ciphertext by many amounts with a single ModUp.
 
     φ_g commutes with ModUp (it permutes coefficients limb-wise), so the digit
-    decomposition of ``a`` is computed once and permuted per rotation —
-    the per-rotation cost drops to the evk inner product + ModDown.
+    decomposition of ``a`` is computed once and permuted per rotation — the
+    per-rotation cost drops to the evk inner product + ModDown.  The fused
+    engine additionally collapses the whole set into ONE AutoU∘KS kernel
+    launch, ONE stacked ModDown, and ONE multi-perm launch for the b-halves;
+    :func:`hrot_hoisted_eager` is the bit-exact per-rotation baseline.
     """
+    if _use_fused():
+        return hrot_hoisted_fused(ct, rotations, keys)
+    return hrot_hoisted_eager(ct, rotations, keys)
+
+
+def hrot_hoisted_eager(ct: Ciphertext, rotations: list[int],
+                       keys: KeySet) -> list[Ciphertext]:
+    """Hoisted rotations, one evk inner product + ModDown per rotation."""
     N = ct.a.N
     a, b = ct.a.to_ntt(), ct.b.to_ntt()
     exts = mod_up_all_digits(a, keys.params)
@@ -283,10 +439,79 @@ def hrot_hoisted(ct: Ciphertext, rotations: list[int],
             out.append(Ciphertext(a, b, ct.scale))
             continue
         g = pl.galois_elt(r, N)
-        perm = pl.automorphism_perm(N, g)
-        exts_g = [e.automorphism(perm) for e in exts]
+        exts_g = [e.automorphism_by_gelt(g) for e in exts]
         ka, kb = ks_inner(exts_g, keys.galois_key(g), keys.params, a.ell)
-        out.append(Ciphertext(-ka, b.automorphism(perm) - kb, ct.scale))
+        out.append(Ciphertext(-ka, b.automorphism_by_gelt(g) - kb, ct.scale))
+    return out
+
+
+def hrot_hoisted_fused(ct: Ciphertext, rotations: list[int],
+                       keys: KeySet) -> list[Ciphertext]:
+    """Hoisted rotations through the fused AutoU∘KS kernel (one launch for
+    the whole set) — bit-exact against :func:`hrot_hoisted_eager`."""
+    N = ct.a.N
+    a, b = ct.a.to_ntt(), ct.b.to_ntt()
+    out = [Ciphertext(a, b, ct.scale) for _ in rotations]
+    nontriv = [(i, pl.galois_elt(r, N)) for i, r in enumerate(rotations)
+               if r % (N // 2) != 0]
+    if not nontriv:
+        return out
+    exts = mod_up_all_digits(a, keys.params)
+    gelts = tuple(g for _, g in nontriv)
+    k = _fused_galois_ks(exts, gelts, keys, a.ell)          # (R, 2, ℓ, N)
+    b_rot = _rotated_b(b, gelts)                            # (R, ℓ, N)
+    ka = pl.RnsPoly(k.data[:, 0], k.basis, k.domain)
+    kb = pl.RnsPoly(k.data[:, 1], k.basis, k.domain)
+    diff = b_rot - kb                                       # batched over R
+    neg = -ka
+    for j, (i, _) in enumerate(nontriv):
+        out[i] = Ciphertext(pl.RnsPoly(neg.data[j], neg.basis, neg.domain),
+                            pl.RnsPoly(diff.data[j], diff.basis, diff.domain),
+                            ct.scale)
+    return out
+
+
+def hrot_many(cts: list[Ciphertext], rotations: list[int],
+              keys: KeySet) -> list[Ciphertext]:
+    """Rotate DISTINCT ciphertexts by per-ciphertext amounts, batched.
+
+    The second half of double-hoisting: ``linear_transform``'s giant-step
+    accumulators are different ciphertexts, so their ModUps cannot be shared —
+    but they CAN be stacked: one leading-dim-batched ModUp (BConv/NTT grids),
+    ONE fused AutoU∘KS launch with per-rotation perms and evks, ONE stacked
+    ModDown, ONE multi-perm launch for the b-halves.  All cts must sit at the
+    same level.  Falls back to per-ciphertext :func:`hrot` on the eager path.
+    """
+    assert len(cts) == len(rotations)
+    if not cts:
+        return []
+    N = cts[0].a.N
+    if not _use_fused():
+        return [Ciphertext(c.a, c.b, c.scale) if r % (N // 2) == 0
+                else hrot(c, r, keys) for c, r in zip(cts, rotations)]
+    out = [Ciphertext(c.a.to_ntt(), c.b.to_ntt(), c.scale) for c in cts]
+    nontriv = [(i, pl.galois_elt(r, N)) for i, r in enumerate(rotations)
+               if r % (N // 2) != 0]
+    if not nontriv:
+        return out
+    sel = [i for i, _ in nontriv]
+    gelts = tuple(g for _, g in nontriv)
+    ell = out[sel[0]].a.ell
+    assert all(out[i].a.ell == ell for i in sel), "hrot_many needs equal levels"
+    basis = out[sel[0]].basis
+    a_stack = pl.RnsPoly(jnp.stack([out[i].a.data for i in sel]), basis, pl.NTT)
+    b_stack = pl.RnsPoly(jnp.stack([out[i].b.data for i in sel]), basis, pl.NTT)
+    exts = mod_up_all_digits(a_stack, keys.params)          # each (R, L, N)
+    k = _fused_galois_ks(exts, gelts, keys, ell)            # (R, 2, ℓ, N)
+    b_rot = _rotated_b(b_stack, gelts)
+    ka = pl.RnsPoly(k.data[:, 0], k.basis, k.domain)
+    kb = pl.RnsPoly(k.data[:, 1], k.basis, k.domain)
+    diff = b_rot - kb
+    neg = -ka
+    for j, (i, _) in enumerate(nontriv):
+        out[i] = Ciphertext(pl.RnsPoly(neg.data[j], neg.basis, neg.domain),
+                            pl.RnsPoly(diff.data[j], diff.basis, diff.domain),
+                            cts[i].scale)
     return out
 
 
@@ -294,9 +519,20 @@ def hrot_by_progression(ct: Ciphertext, step: int, count: int,
                         keys: KeySet) -> list[Ciphertext]:
     """Minimum key-switching (§V-B): rotations {step, 2·step, …} with ONE evk.
 
-    Returns [rot(ct, j·step) for j in 1..count], computed recursively so only
-    evk_{step} is required (evk traffic ÷ count, at the cost of serial KS).
+    Returns [rot(ct, j·step) for j in 1..count].  When the keyset only holds
+    evk_{step} (the minimum-KS configuration) the progression is computed
+    recursively — evk traffic ÷ count, at the cost of serial KS.  When a key
+    exists for EVERY multiple (non-min-KS setups) and the fused engine is
+    active, the whole progression collapses into one hoisted batched call:
+    a single ModUp and a single AutoU∘KS kernel launch stacking all the
+    per-step key-switches.
     """
+    N = ct.a.N
+    rots = [step * (j + 1) for j in range(count)]
+    if _use_fused():
+        need = {pl.galois_elt(r, N) for r in rots if r % (N // 2) != 0}
+        if need <= set(keys.galois):
+            return hrot_hoisted(ct, rots, keys)
     out = []
     cur = ct
     for _ in range(count):

@@ -148,6 +148,30 @@ def device_bconv_consts(src: tuple[int, ...],
     )
 
 
+def device_galois_perm(N: int, g: int) -> jnp.ndarray:
+    """Automorphism index vector perm_{N,g} as a device-resident (N,) i32.
+
+    The host build (:func:`repro.core.poly.automorphism_perm`) is lru-cached
+    numpy; this stages it once per (N, g) so rotation-heavy workloads
+    (bootstrap fires hundreds per ``linear_transform``) perform ZERO per-call
+    perm uploads in steady state — counted by :func:`stage_events` and gated
+    in ``BENCH_rotation.json``.
+    """
+    def build():
+        from . import poly
+        return poly.automorphism_perm(N, g)
+    return device_table(("galois_perm", N, g), build)
+
+
+def device_galois_perm_stack(N: int, gs: tuple) -> jnp.ndarray:
+    """Stacked (R, N) i32 perm table for a rotation *set* — the operand of the
+    multi-perm / fused AutoU∘KS kernels, staged once per (N, gs)."""
+    def build():
+        from . import poly
+        return np.stack([poly.automorphism_perm(N, g) for g in gs])
+    return device_table(("galois_perm_stack", N, tuple(gs)), build)
+
+
 def device_table(key: Hashable, builder: Callable[[], Any]) -> Any:
     """Stage an ad-hoc constant (scalar vector, monomial table, …) once.
 

@@ -98,12 +98,38 @@ class KeySet:
     sk: SecretKey
     relin: EvalKey                          # for s²
     galois: dict[int, EvalKey]              # galois element → key (incl. conj)
+    # stacked galois digit keys per (rotation set, level) — the fused
+    # AutoU∘KS kernel operand; bounded FIFO like EvalKey._level_cache.
+    _stack_cache: dict = dataclasses.field(default_factory=dict, repr=False)
 
     def galois_key(self, g: int) -> EvalKey:
         if g not in self.galois:
             raise KeyError(
                 f"no galois key for element {g}; generated: {sorted(self.galois)}")
         return self.galois[g]
+
+    def galois_stacked(self, gelts: tuple[int, ...], idx: tuple[int, ...],
+                       level_basis: tuple[int, ...], ndig: int):
+        """(A, B): stacked (R, dnum, ℓ+K, N) galois digit keys for a rotation
+        set, level-sliced and device-stacked once per (gelts, basis) — the
+        hoisted/batched rotation paths re-stack nothing in steady state."""
+        key = (tuple(gelts), level_basis, ndig)
+        out = self._stack_cache.get(key)
+        if out is None:
+            # slice straight off the full-basis keys rather than through
+            # EvalKey.at_level — only the stacked buffers are consumed on the
+            # fused path, so populating the per-key level caches would pin a
+            # second full copy of every galois digit key in device memory.
+            take = jnp.asarray(np.array(idx, dtype=np.int32))
+            sl = lambda p: jnp.take(p.data, take, axis=-2)
+            A = jnp.stack([jnp.stack([sl(aj) for aj in ek.a()[:ndig]])
+                           for ek in (self.galois_key(g) for g in gelts)])
+            B = jnp.stack([jnp.stack([sl(bj) for bj in ek.b[:ndig]])
+                           for ek in (self.galois_key(g) for g in gelts)])
+            if len(self._stack_cache) >= 8:
+                self._stack_cache.pop(next(iter(self._stack_cache)))
+            out = self._stack_cache[key] = (A, B)
+        return out
 
 
 def _digit_interp_factors(params: CkksParams) -> list[list[int]]:

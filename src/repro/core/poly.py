@@ -116,12 +116,21 @@ class RnsPoly:
         """Sub-poly restricted to a contiguous slice of limbs."""
         return RnsPoly(self.data[..., idx, :], self.basis[idx], self.domain)
 
-    def automorphism(self, perm: np.ndarray) -> "RnsPoly":
-        """Apply φ as an NTT-domain index permutation (natural order)."""
+    def automorphism(self, perm) -> "RnsPoly":
+        """Apply φ as an NTT-domain index permutation (natural order).
+
+        ``perm`` may be a host numpy vector or an already-staged device array
+        (``jnp.asarray`` is a no-op for the latter — zero uploads).
+        """
         assert self.domain == NTT
         trace.record("auto", int(np.prod(self.data.shape[:-1])), self.N)
         return RnsPoly(jnp.take(self.data, jnp.asarray(perm), axis=-1),
                        self.basis, NTT)
+
+    def automorphism_by_gelt(self, g: int) -> "RnsPoly":
+        """φ_g via the device-staged perm table from ``const_cache`` — the
+        steady-state rotation path performs zero per-call perm uploads."""
+        return self.automorphism(const_cache.device_galois_perm(self.N, g))
 
 
 # ----------------------------------------------------------------------------

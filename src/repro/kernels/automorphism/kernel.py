@@ -1,9 +1,32 @@
-"""AutoU: automorphism φ_g as an NTT-domain index permutation kernel.
+"""AutoU: automorphism φ_g as an NTT-domain index permutation kernel, plus the
+fused AutoU∘KS MAC kernel.
 
 CiFHER's AutoU is a permutation network over the lanes; on TPU the permutation
 is a VMEM gather with a precomputed index vector (natural-order NTT domain
-keeps φ_g sign-free — see ``repro.core.poly.automorphism_perm``).
-Grid = (poly, limb); the whole limb sits in VMEM.
+keeps φ_g sign-free — see ``repro.core.poly.automorphism_perm``).  Three
+kernels live here:
+
+* :func:`automorphism_pallas` — the batched permutation.  All leading dims
+  (ciphertext components × limbs) flatten into ONE grid dimension of
+  ``B / limbs_per_block`` programs, mirroring the PR 1 NTT limb grid; each
+  program permutes a ``(limbs_per_block, N)`` block resident in VMEM.
+* :func:`automorphism_multi_pallas` — R *different* permutations applied in
+  one launch (``perms`` is (R, N)); the data operand either provides one
+  block per permutation (G = R) or is shared by all of them (G = 1,
+  broadcast).  This is what batches the b-halves / giant-step automorphisms
+  of a rotation set into a single dispatch.
+* :func:`auto_ks_pallas` — the fused AutoU∘KS kernel: the Galois permutation
+  is applied to each hoisted digit *inside* the evk MAC accumulation, so no
+  permuted digit is ever materialized in HBM.  One program owns one
+  (rotation, limb-block) output tile and loops digits in VREGs
+  (output-stationary, like the BConvU kernel); products use double-REDC
+  Montgomery (evk halves are data, not constants — no Shoup companions),
+  accumulation is the lazy hi16/lo16 column sum with a single Barrett
+  reduction per output.
+
+The previous one-limb-per-program kernel is kept as
+:func:`automorphism_pallas_eager` — the before-side of
+``benchmarks/bench_rotation.py``.
 """
 from __future__ import annotations
 
@@ -13,17 +36,29 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import modmath as mm
+from repro.kernels.config import effective_block
 
-def _body(x_ref, perm_ref, o_ref):
+_M16 = 0xFFFF  # Python int: weak-typed, safe inside Pallas kernels
+
+
+# ----------------------------------------------------------------------------
+# Eager per-limb kernel (pre-overhaul baseline, kept for parity/benchmarks)
+# ----------------------------------------------------------------------------
+
+def _eager_body(x_ref, perm_ref, o_ref):
     o_ref[0, 0] = jnp.take(x_ref[0, 0], perm_ref[...], axis=0)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def automorphism_pallas(x, perm, *, interpret: bool = True):
-    """x: (P, ℓ, N) u32, perm: (N,) i32 → out[p, i, k] = x[p, i, perm[k]]."""
+def automorphism_pallas_eager(x, perm, *, interpret: bool = True):
+    """x: (P, ℓ, N) u32, perm: (N,) i32 → out[p, i, k] = x[p, i, perm[k]].
+
+    One grid program per (poly, limb) — the pre-overhaul launch granularity.
+    """
     P, ell, N = x.shape
     return pl.pallas_call(
-        _body,
+        _eager_body,
         grid=(P, ell),
         in_specs=[
             pl.BlockSpec((1, 1, N), lambda p, i: (p, i, 0)),
@@ -33,3 +68,145 @@ def automorphism_pallas(x, perm, *, interpret: bool = True):
         out_shape=jax.ShapeDtypeStruct((P, ell, N), jnp.uint32),
         interpret=interpret,
     )(x, perm)
+
+
+# ----------------------------------------------------------------------------
+# Batched single-permutation kernel (flattened leading dims, limb blocks)
+# ----------------------------------------------------------------------------
+
+def _batched_body(x_ref, perm_ref, o_ref):
+    o_ref[...] = jnp.take(x_ref[...], perm_ref[...], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("limbs_per_block", "interpret"))
+def automorphism_pallas(x, perm, *, limbs_per_block: int | None = None,
+                        interpret: bool = True):
+    """x: (..., N) u32, perm: (N,) i32 → out[..., k] = x[..., perm[k]].
+
+    All leading dims flatten into one grid dimension of ``B/limbs_per_block``
+    programs (``limbs_per_block`` rounds down to a divisor of B, default 4) —
+    the whole (block, N) tile sits in VMEM and one gather permutes every row.
+    """
+    shape = x.shape
+    N = shape[-1]
+    flat = x.reshape(-1, N)
+    B = flat.shape[0]
+    L = effective_block(B, limbs_per_block)
+    out = pl.pallas_call(
+        _batched_body,
+        grid=(B // L,),
+        in_specs=[
+            pl.BlockSpec((L, N), lambda g: (g, 0)),
+            pl.BlockSpec((N,), lambda g: (0,)),
+        ],
+        out_specs=pl.BlockSpec((L, N), lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.uint32),
+        interpret=interpret,
+    )(flat, perm)
+    return out.reshape(shape)
+
+
+# ----------------------------------------------------------------------------
+# Multi-permutation kernel (R rotations, one launch)
+# ----------------------------------------------------------------------------
+
+def _multi_body(x_ref, perms_ref, o_ref):
+    o_ref[0] = jnp.take(x_ref[0], perms_ref[0], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("limbs_per_block", "interpret"))
+def automorphism_multi_pallas(x, perms, *, limbs_per_block: int | None = None,
+                              interpret: bool = True):
+    """x: (G, L, N) with G ∈ {1, R}; perms: (R, N) → out (R, L, N).
+
+    out[r, i, k] = x[r if G == R else 0, i, perms[r, k]] — R different Galois
+    permutations in ONE launch; G = 1 broadcasts a shared operand (e.g. the
+    b-half of a hoisted rotation set) across all R permutations.
+    """
+    G, L, N = x.shape
+    R = perms.shape[0]
+    assert G in (1, R), f"data batch {G} must be 1 or match perms batch {R}"
+    Lb = effective_block(L, limbs_per_block)
+    x_index = ((lambda r, l: (r, l, 0)) if G == R
+               else (lambda r, l: (0, l, 0)))
+    return pl.pallas_call(
+        _multi_body,
+        grid=(R, L // Lb),
+        in_specs=[
+            pl.BlockSpec((1, Lb, N), x_index),
+            pl.BlockSpec((1, N), lambda r, l: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Lb, N), lambda r, l: (r, l, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, L, N), jnp.uint32),
+        interpret=interpret,
+    )(x, perms)
+
+
+# ----------------------------------------------------------------------------
+# Fused AutoU ∘ KS kernel
+# ----------------------------------------------------------------------------
+
+def _auto_ks_body(J, Lb, exts_ref, ea_ref, eb_ref, perm_ref,
+                  q_ref, qinv_ref, r2_ref, muh_ref, mul_ref, o_ref):
+    perm = perm_ref[0]
+    for li in range(Lb):                      # static limb block
+        q = q_ref[li, 0]
+        qinv = qinv_ref[li, 0]
+        r2 = r2_ref[li, 0]
+        zero = jnp.zeros_like(o_ref[0, 0, li])
+        lo_a = hi_a = lo_b = hi_b = zero
+        for j in range(J):                    # static digit contraction
+            e = jnp.take(exts_ref[j, 0, li], perm, axis=0)
+            ta = mm.mulmod(e, ea_ref[0, j, li], q, qinv, r2)
+            tb = mm.mulmod(e, eb_ref[0, j, li], q, qinv, r2)
+            lo_a = lo_a + (ta & _M16)
+            hi_a = hi_a + (ta >> 16)
+            lo_b = lo_b + (tb & _M16)
+            hi_b = hi_b + (tb >> 16)
+        for c, (hi16, lo16) in enumerate(((hi_a, lo_a), (hi_b, lo_b))):
+            lo = ((hi16 & _M16) << 16) + lo16
+            carry = (lo < lo16).astype(jnp.uint32)
+            hi = (hi16 >> 16) + carry
+            o_ref[0, c, li] = mm.barrett_reduce_wide(
+                hi, lo, q, muh_ref[li, 0], mul_ref[li, 0])
+
+
+@functools.partial(jax.jit, static_argnames=("limbs_per_block", "interpret"))
+def auto_ks_pallas(exts, evk_a, evk_b, perms, q, qinv_neg, r2, mu_hi, mu_lo,
+                   *, limbs_per_block: int | None = None,
+                   interpret: bool = True):
+    """Fused φ_g ∘ (evk inner product) for R rotations in ONE launch.
+
+        out[r, 0, i, k] = Σ_j exts[j, ·, i, perms[r, k]] · evk_a[r, j, i, k]
+        out[r, 1, i, k] = Σ_j exts[j, ·, i, perms[r, k]] · evk_b[r, j, i, k]
+
+    ``exts``: (J, G, L, N) hoisted digit decompositions with G ∈ {1, R} —
+    G = 1 shares one ModUp across all rotations (hoisting), G = R gives each
+    rotation its own decomposition (batched distinct ciphertexts).
+    ``evk_a``/``evk_b``: (R, J, L, N) level-sliced digit keys; ``perms``:
+    (R, N) i32; per-limb consts (L, 1).  Grid = (R, L/limbs_per_block); each
+    program is output-stationary over its (rotation, limb-block) tile and
+    never materializes a permuted digit outside VREGs.
+    """
+    J, G, L, N = exts.shape
+    R = perms.shape[0]
+    assert G in (1, R), f"exts batch {G} must be 1 or match perms batch {R}"
+    assert evk_a.shape == (R, J, L, N) and evk_b.shape == (R, J, L, N)
+    Lb = effective_block(L, limbs_per_block)
+    exts_index = ((lambda r, l: (0, r, l, 0)) if G == R
+                  else (lambda r, l: (0, 0, l, 0)))
+    const_spec = pl.BlockSpec((Lb, 1), lambda r, l: (l, 0))
+    return pl.pallas_call(
+        functools.partial(_auto_ks_body, J, Lb),
+        grid=(R, L // Lb),
+        in_specs=[
+            pl.BlockSpec((J, 1, Lb, N), exts_index),
+            pl.BlockSpec((1, J, Lb, N), lambda r, l: (r, 0, l, 0)),
+            pl.BlockSpec((1, J, Lb, N), lambda r, l: (r, 0, l, 0)),
+            pl.BlockSpec((1, N), lambda r, l: (r, 0)),
+            const_spec, const_spec, const_spec, const_spec, const_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 2, Lb, N), lambda r, l: (r, 0, l, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, 2, L, N), jnp.uint32),
+        interpret=interpret,
+    )(exts, evk_a, evk_b, perms, q, qinv_neg, r2, mu_hi, mu_lo)

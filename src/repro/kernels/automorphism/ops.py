@@ -1,17 +1,59 @@
-"""Public wrapper: rotate/conjugate an NTT-domain poly by galois element."""
+"""Public wrappers: rotate/conjugate NTT-domain polys and the fused AutoU∘KS.
+
+Perm tables are device-resident via :mod:`repro.core.const_cache` (staged once
+per (N, g) — zero per-call uploads) and the execution mode resolves through
+:mod:`repro.kernels.config` (``REPRO_KERNEL_MODE``), like every kernel family.
+"""
 from __future__ import annotations
 
-import jax.numpy as jnp
-
+from repro.core import const_cache
 from repro.core import poly as pl_core
+from repro.kernels import config
 
-from .kernel import automorphism_pallas
-
-
-def apply_galois(x, N: int, g: int, interpret: bool = True):
-    perm = pl_core.automorphism_perm(N, g)
-    return automorphism_pallas(x, jnp.asarray(perm), interpret=interpret)
+from .kernel import (auto_ks_pallas, automorphism_multi_pallas,
+                     automorphism_pallas)
 
 
-def apply_rotation(x, N: int, r: int, interpret: bool = True):
-    return apply_galois(x, N, pl_core.galois_elt(r, N), interpret=interpret)
+def apply_galois(x, N: int, g: int, interpret: bool | None = None,
+                 limbs_per_block: int | None = None):
+    """x: (..., N) u32 → φ_g(x), batched over all leading dims in one launch."""
+    perm = const_cache.device_galois_perm(N, g)
+    config.count_launch("automorphism")
+    return automorphism_pallas(x, perm, limbs_per_block=limbs_per_block,
+                               interpret=config.resolve_interpret(interpret))
+
+
+def apply_rotation(x, N: int, r: int, interpret: bool | None = None,
+                   limbs_per_block: int | None = None):
+    return apply_galois(x, N, pl_core.galois_elt(r, N), interpret=interpret,
+                        limbs_per_block=limbs_per_block)
+
+
+def apply_galois_many(x, N: int, gs: tuple, interpret: bool | None = None,
+                      limbs_per_block: int | None = None):
+    """x: (G, L, N) with G ∈ {1, len(gs)} → (R, L, N), one launch for the
+    whole rotation set (G = 1 broadcasts a shared operand)."""
+    perms = const_cache.device_galois_perm_stack(N, tuple(gs))
+    config.count_launch("automorphism")
+    return automorphism_multi_pallas(
+        x, perms, limbs_per_block=limbs_per_block,
+        interpret=config.resolve_interpret(interpret))
+
+
+def auto_ks(exts, evk_a, evk_b, N: int, gs: tuple, basis: tuple[int, ...],
+            interpret: bool | None = None,
+            limbs_per_block: int | None = None):
+    """Fused φ_g ∘ evk-MAC for the rotation set ``gs`` (see
+    :func:`repro.kernels.automorphism.kernel.auto_ks_pallas`).
+
+    ``basis`` is the extended basis Q_ℓ ∪ P of the hoisted digits; all limb
+    constants (q, Montgomery, Barrett) come device-resident from
+    :func:`repro.core.const_cache.device_ntt_consts`.
+    """
+    c = const_cache.device_ntt_consts(tuple(basis), N)
+    perms = const_cache.device_galois_perm_stack(N, tuple(gs))
+    config.count_launch("auto_ks")
+    return auto_ks_pallas(exts, evk_a, evk_b, perms,
+                          c.q, c.qinv_neg, c.r2, c.mu_hi, c.mu_lo,
+                          limbs_per_block=limbs_per_block,
+                          interpret=config.resolve_interpret(interpret))

@@ -34,11 +34,8 @@ from repro.core import modmath as mm
 
 def effective_block_b(B: int, requested: int | None) -> int:
     """Largest divisor of ``B`` that is ≤ the requested batch block (default 4)."""
-    requested = 4 if requested is None else max(1, requested)
-    b = min(requested, B)
-    while B % b:
-        b -= 1
-    return b
+    from repro.kernels.config import effective_block
+    return effective_block(B, requested)
 
 
 def _body(ell, block_b, x_ref, tab_ref, tabs_ref, q_ref, mu_hi_ref, mu_lo_ref,

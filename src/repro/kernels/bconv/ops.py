@@ -3,17 +3,19 @@ from __future__ import annotations
 
 from repro.core import const_cache
 from repro.core import modmath as mm
+from repro.kernels import config
 
 
 def bconv(x, src: tuple[int, ...], dst: tuple[int, ...],
           tile: int = 2048, block_b: int | None = None,
-          interpret: bool = True):
+          interpret: bool | None = None):
     """(…, ℓ, N) coeff-domain residues in ``src`` → (…, K, N) in ``dst`` (HPS).
 
     All leading dims are flattened into the kernel's batch grid axis; every
     table/constant is device-resident via
     :func:`repro.core.const_cache.device_bconv_consts` (staged once per
-    (src, dst) — no per-call host→device uploads).
+    (src, dst) — no per-call host→device uploads).  ``interpret=None``
+    resolves through :mod:`repro.kernels.config` (``REPRO_KERNEL_MODE``).
     """
     from .kernel import bconv_matmul_pallas
     src, dst = tuple(src), tuple(dst)
@@ -21,7 +23,9 @@ def bconv(x, src: tuple[int, ...], dst: tuple[int, ...],
     t = mm.mulmod_shoup(x, c.qhat_inv, c.qhat_inv_shoup, c.q_src)
     lead = t.shape[:-2]
     flat = t.reshape((-1,) + t.shape[-2:])
+    config.count_launch("bconv")
     out = bconv_matmul_pallas(
         flat, c.table, c.table_shoup, c.q_dst, c.mu_hi, c.mu_lo,
-        tile=min(tile, x.shape[-1]), block_b=block_b, interpret=interpret)
+        tile=min(tile, x.shape[-1]), block_b=block_b,
+        interpret=config.resolve_interpret(interpret))
     return out.reshape(lead + out.shape[-2:])

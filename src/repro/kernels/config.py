@@ -1,0 +1,119 @@
+"""Execution-mode plumbing shared by all four Pallas kernel families.
+
+Every kernel wrapper used to hardcode ``interpret=True`` at each call site,
+which was correct on the CPU containers this repo develops on but wrong the
+moment the same code lands on a real TPU.  This module centralizes the choice
+behind one knob (same get/set/env/context-manager pattern as
+``repro.core.bconv``'s ``REPRO_BCONV_ENGINE``):
+
+* ``REPRO_KERNEL_MODE=interpret`` — always run Pallas kernels in interpret
+  mode (the only mode that executes on CPU backends);
+* ``REPRO_KERNEL_MODE=compile``   — always lower for real (TPU) execution;
+* ``REPRO_KERNEL_MODE=auto``      — (default) interpret everywhere except a
+  real TPU backend.
+
+Kernel wrappers take ``interpret: bool | None = None`` and resolve ``None``
+through :func:`resolve_interpret`; an explicit bool always wins (tests pin
+interpret mode regardless of backend).
+
+The module also keeps a per-family **kernel-launch counter**: each public op
+wrapper calls :func:`count_launch` once per dispatch, giving benchmarks a
+deterministic "how many kernel launches did this workload issue" metric
+(``benchmarks/bench_rotation.py`` gates the `linear_transform` launch count
+in CI — batching regressions show up as a growing counter, immune to
+wall-clock noise).
+"""
+from __future__ import annotations
+
+import collections
+import os
+
+_MODES = ("interpret", "compile", "auto")
+_mode = os.environ.get("REPRO_KERNEL_MODE", "auto")
+if _mode not in _MODES:
+    raise ValueError(
+        f"REPRO_KERNEL_MODE={_mode!r} — must be one of {_MODES}")
+
+
+def get_mode() -> str:
+    return _mode
+
+
+def set_mode(name: str) -> None:
+    """Select the kernel execution mode globally ("interpret"|"compile"|"auto")."""
+    global _mode
+    if name not in _MODES:
+        raise ValueError(f"unknown kernel mode {name!r} — one of {_MODES}")
+    _mode = name
+
+
+class use_mode:
+    """Context manager pinning the kernel execution mode (tests, benchmarks)."""
+
+    def __init__(self, name: str):
+        if name not in _MODES:
+            raise ValueError(f"unknown kernel mode {name!r} — one of {_MODES}")
+        self.name = name
+
+    def __enter__(self):
+        self._saved = _mode
+        set_mode(self.name)
+        return self
+
+    def __exit__(self, *exc):
+        set_mode(self._saved)
+        return False
+
+
+def _auto_interpret() -> bool:
+    try:
+        import jax
+        return jax.default_backend() != "tpu"
+    except Exception:  # pragma: no cover - jax always importable here
+        return True
+
+
+def resolve_interpret(flag: bool | None = None) -> bool:
+    """Resolve a wrapper's ``interpret`` argument against the global mode."""
+    if flag is not None:
+        return bool(flag)
+    if _mode == "interpret":
+        return True
+    if _mode == "compile":
+        return False
+    return _auto_interpret()
+
+
+def effective_block(B: int, requested: int | None, default: int = 4) -> int:
+    """Largest divisor of ``B`` that is ≤ the requested block size.
+
+    The shared grid-batching policy of every kernel family (NTT/eltwise
+    ``limbs_per_block``, BConv ``block_b``, automorphism limb blocks): the
+    request is clamped to [1, B] and rounded down to a divisor of B so every
+    program owns an equal block.
+    """
+    want = max(1, min(B, requested if requested else default))
+    return max(d for d in range(1, want + 1) if B % d == 0)
+
+
+# ----------------------------------------------------------------------------
+# Kernel-launch accounting
+# ----------------------------------------------------------------------------
+
+_launches: collections.Counter = collections.Counter()
+
+
+def count_launch(family: str, n: int = 1) -> None:
+    """Record ``n`` kernel dispatches of the given family ("ntt", "bconv",
+    "eltwise", "automorphism", "auto_ks")."""
+    _launches[family] += n
+
+
+def launch_counts() -> dict:
+    """Snapshot of per-family dispatch counts since process start (monotonic;
+    diff two snapshots to count a region)."""
+    return dict(_launches)
+
+
+def total_launches() -> int:
+    return sum(_launches.values())

@@ -1,14 +1,23 @@
-"""Public wrappers for the EFU kernel."""
+"""Public wrappers for the EFU kernel.
+
+Per-limb constants come device-resident from
+:func:`repro.core.const_cache.device_ntt_consts` (staged once per (basis, N) —
+no per-call uploads) and the execution mode resolves through
+:mod:`repro.kernels.config`.
+"""
 from __future__ import annotations
 
-import jax.numpy as jnp
-
-from repro.core import ntt as nttm
+from repro.core import const_cache
+from repro.kernels import config
 
 from .kernel import eltwise_pallas
 
 
-def eltwise(op: str, basis: tuple[int, ...], *arrays, interpret: bool = True):
-    c = nttm.stacked_ntt_consts(tuple(basis), arrays[0].shape[-1])
-    return eltwise_pallas(op, jnp.asarray(c.q), jnp.asarray(c.qinv_neg),
-                          jnp.asarray(c.r2), *arrays, interpret=interpret)
+def eltwise(op: str, basis: tuple[int, ...], *arrays,
+            interpret: bool | None = None, tile: int = 4096,
+            limbs_per_block: int | None = None):
+    c = const_cache.device_ntt_consts(tuple(basis), arrays[0].shape[-1])
+    config.count_launch("eltwise")
+    return eltwise_pallas(op, c.q, c.qinv_neg, c.r2, *arrays, tile=tile,
+                          limbs_per_block=limbs_per_block,
+                          interpret=config.resolve_interpret(interpret))

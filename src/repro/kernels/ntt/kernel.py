@@ -149,8 +149,8 @@ def _inv_body(R, C, L,
 
 def effective_limbs_per_block(ell: int, limbs_per_block: int | None) -> int:
     """Largest divisor of ℓ not exceeding the requested block size (default 4)."""
-    want = max(1, min(ell, limbs_per_block if limbs_per_block else 4))
-    return max(d for d in range(1, want + 1) if ell % d == 0)
+    from repro.kernels.config import effective_block
+    return effective_block(ell, limbs_per_block)
 
 
 def ntt_pallas(x, *, R: int, basis: tuple[int, ...], forward: bool = True,

@@ -3,6 +3,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels import config
+
 from .kernel import ntt_pallas
 
 
@@ -15,23 +17,28 @@ def default_submodules(N: int) -> int:
 
 
 def ntt_fwd(x, basis: tuple[int, ...], R: int | None = None,
-            interpret: bool = True, limbs_per_block: int | None = None):
+            interpret: bool | None = None, limbs_per_block: int | None = None):
     """Forward negacyclic NTT of (P, ℓ, N) u32 via the Pallas kernel.
 
     ``limbs_per_block`` batches that many limbs into one grid program
     (rounded down to a divisor of ℓ; default 4) — small polynomials amortize
-    per-program overhead across limbs.
+    per-program overhead across limbs.  ``interpret=None`` resolves through
+    :mod:`repro.kernels.config` (``REPRO_KERNEL_MODE``).
     """
     R = R or default_submodules(x.shape[-1])
+    config.count_launch("ntt")
     return ntt_pallas(x, R=R, basis=tuple(basis), forward=True,
-                      interpret=interpret, limbs_per_block=limbs_per_block)
+                      interpret=config.resolve_interpret(interpret),
+                      limbs_per_block=limbs_per_block)
 
 
 def ntt_inv(x, basis: tuple[int, ...], R: int | None = None,
-            interpret: bool = True, limbs_per_block: int | None = None):
+            interpret: bool | None = None, limbs_per_block: int | None = None):
     R = R or default_submodules(x.shape[-1])
+    config.count_launch("ntt")
     return ntt_pallas(x, R=R, basis=tuple(basis), forward=False,
-                      interpret=interpret, limbs_per_block=limbs_per_block)
+                      interpret=config.resolve_interpret(interpret),
+                      limbs_per_block=limbs_per_block)
 
 
 def lower_tpu(x_shape, basis: tuple[int, ...], R: int, forward: bool = True,
