@@ -119,7 +119,7 @@ def steady_state_uploads(N: int) -> int:
     before = const_cache.stage_events()
     for _ in range(8):
         jax.block_until_ready(bc.bconv_raw(x, src, dst))
-    return const_cache.stage_events() - before
+    return const_cache.stage_events_since(before)
 
 
 def trace_counts(N: int) -> dict:

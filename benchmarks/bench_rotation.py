@@ -141,12 +141,10 @@ def launch_and_trace_counts(N: int) -> dict:
     with ckks.use_engine("fused"):
         jax.block_until_ready(
             boot.linear_transform(ct, ctx.cts_diags, ctx).a.data)   # warm
-        before = kconfig.launch_counts()
-        with trace.trace_ops() as t:
+        with kconfig.count_region() as c, trace.trace_ops() as t:
             jax.block_until_ready(
                 boot.linear_transform(ct, ctx.cts_diags, ctx).a.data)
-        after = kconfig.launch_counts()
-    launches = {k: after.get(k, 0) - before.get(k, 0)
+    launches = {k: c.deltas.get(k, 0)
                 for k in ("auto_ks", "automorphism", "bconv", "eltwise")}
     s = t.summary()
     return {"launches": launches,
@@ -204,7 +202,7 @@ def steady_state_uploads(N: int) -> int:
         before = const_cache.stage_events()
         for _ in range(6):
             jax.block_until_ready(ckks.hrot_hoisted(ct, [1, 2], ks)[0].a.data)
-        return const_cache.stage_events() - before
+        return const_cache.stage_events_since(before)
 
 
 def main(argv=None) -> dict:

@@ -1,0 +1,166 @@
+"""Measured serving-throughput benchmark for the multi-tenant FHE engine
+(EXPERIMENTS.md §Serve).
+
+Serves the same 16-request wave (2 tenants, the standard
+multiply-rotate-accumulate program) through the FheServeEngine at batch
+sizes 1, 4, and 16, interleaving the timed waves so container-level drift
+hits every batch size equally.  Alongside wall-clock requests/sec, it
+records the DETERMINISTIC quantities CI gates on:
+
+  * per-request kernel-launch counts must fall strictly as batch grows
+    (the whole point of ciphertext batching: a wave of HMults is one
+    stacked tensor product + ONE ModDown regardless of batch);
+  * a warm steady-state wave performs ZERO constant/evk uploads and ZERO
+    plan-cache builds;
+  * batched results are BIT-EXACT versus the sequential (batching-off)
+    baseline;
+  * batched-vs-sequential throughput ≥ 3× at batch=16 (interpret mode).
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--quick] [--out PATH]
+"""
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import const_cache
+from repro.core import keys as K
+from repro.core import params as prm
+from repro.kernels import config as kconfig
+from repro.serve import (FheRequest, FheServeEngine, TenantKeyStore,
+                         standard_request)
+
+DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+
+WAVE = 16                      # requests per measured wave
+TENANTS = ("tenant0", "tenant1")
+BATCHES = (1, 4, 16)
+
+
+def _setup(N: int, L: int):
+    p = prm.make_params(N=N, L=L, K=2, dnum=2)
+    store = TenantKeyStore(max_resident=len(TENANTS))
+    for i, t in enumerate(TENANTS):
+        store.register(t, K.keygen(p, rotations=(1,), seed=i))
+    return p, store
+
+
+def _make_request(p, store, tenant: str, seed: int) -> FheRequest:
+    req, _ = standard_request(p, store.keyset(tenant), tenant, seed)
+    return req
+
+
+def _submit_wave(eng, p, store, base_seed: int) -> list[FheRequest]:
+    reqs = []
+    for i in range(WAVE):
+        req = _make_request(p, store, TENANTS[i % len(TENANTS)],
+                            base_seed + i)
+        assert eng.submit(req)
+        reqs.append(req)
+    return reqs
+
+
+def _ct_bits(ct):
+    return (np.asarray(ct.a.to_ntt().data), np.asarray(ct.b.to_ntt().data))
+
+
+def run(reps: int, N: int, L: int) -> dict:
+    p, store = _setup(N, L)
+    engines = {B: FheServeEngine(store, max_batch=B) for B in BATCHES}
+    seq = FheServeEngine(store, max_batch=1, batching=False)
+
+    # warm every engine: first wave compiles/stages everything for its shapes
+    for B, eng in engines.items():
+        _submit_wave(eng, p, store, 0)
+        eng.run_until_drained()
+    _submit_wave(seq, p, store, 0)
+    seq.run_until_drained()
+
+    # sequential baseline outputs for the bit-exactness check
+    seq_reqs = _submit_wave(seq, p, store, 1000)
+    seq.run_until_drained()
+    seq_bits = [_ct_bits(r.result()["out"]) for r in seq_reqs]
+
+    seq_times = []
+    times = {B: [] for B in BATCHES}
+    launches = {}
+    uploads = {}
+    plan_builds = {}
+    exact = True
+    for rep in range(reps):
+        _submit_wave(seq, p, store, 1000 + rep)     # interleaved baseline
+        t0 = time.perf_counter()
+        seq.run_until_drained()
+        seq_times.append(time.perf_counter() - t0)
+        for B, eng in engines.items():          # interleaved A/B/A/B…
+            reqs = _submit_wave(eng, p, store, 1000 + rep)
+            before_up = const_cache.stage_events()
+            before_miss = eng.plans.misses
+            with kconfig.count_region() as c:
+                t0 = time.perf_counter()
+                eng.run_until_drained()
+                times[B].append(time.perf_counter() - t0)
+            launches[B] = c.deltas
+            uploads[B] = const_cache.stage_events_since(before_up)
+            plan_builds[B] = eng.plans.misses - before_miss
+            if rep == 0:
+                for req, (wa, wb) in zip(reqs, seq_bits):
+                    ga, gb = _ct_bits(req.result()["out"])
+                    exact &= (np.array_equal(ga, wa)
+                              and np.array_equal(gb, wb))
+
+    per_req = {B: sum(launches[B].values()) / WAVE for B in BATCHES}
+    rps = {B: WAVE / min(times[B]) for B in BATCHES}
+    seq_rps = WAVE / min(seq_times)
+    decreasing = all(per_req[a] > per_req[b]
+                     for a, b in zip(BATCHES, BATCHES[1:]))
+    out = {
+        "bench": "serve",
+        "params": {"N": p.N, "L": p.L, "dnum": p.dnum,
+                   "tenants": len(TENANTS), "wave": WAVE, "reps": reps},
+        "requests_per_s": {str(B): rps[B] for B in BATCHES},
+        "sequential_requests_per_s": seq_rps,
+        "speedup_b16_vs_sequential": rps[16] / seq_rps,
+        "launches_per_wave": {str(B): launches[B] for B in BATCHES},
+        "launches_per_request": {str(B): per_req[B] for B in BATCHES},
+        "steady_state_uploads": {str(B): uploads[B] for B in BATCHES},
+        "steady_plan_builds": {str(B): plan_builds[B] for B in BATCHES},
+        "gate": {
+            # booleans: invariants; numbers: must not grow vs baseline
+            "batched_speedup_at_least_3x": bool(rps[16] / seq_rps >= 3.0),
+            "launches_per_request_strictly_decreasing": bool(decreasing),
+            "batched_equals_sequential": bool(exact),
+            "steady_state_const_uploads": max(uploads.values()),
+            "steady_plan_builds": max(plan_builds.values()),
+            "b16_wave_launches": sum(launches[16].values()),
+        },
+    }
+    return out
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="one timed rep (CI); default 3")
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    ap.add_argument("--N", type=int, default=1 << 10)
+    ap.add_argument("--L", type=int, default=4)
+    args = ap.parse_args(argv)
+    res = run(reps=1 if args.quick else 3, N=args.N, L=args.L)
+    args.out.write_text(json.dumps(res, indent=1, sort_keys=True) + "\n")
+    print(json.dumps(res["gate"], indent=1))
+    print(f"wrote {args.out}")
+    failed = [k for k, v in res["gate"].items()
+              if isinstance(v, bool) and v is not True]
+    if failed:
+        raise RuntimeError(f"serve gate invariants failed: {failed}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,11 @@ machines, so timing lives in the artifact for trend inspection only.
     python -m benchmarks.check_bench_regression \
         --baseline BENCH_ntt.json --candidate /tmp/BENCH_ntt.json \
         --baseline BENCH_bconv.json --candidate /tmp/BENCH_bconv.json
+
+Registered gates: BENCH_ntt.json (bench_ntt), BENCH_bconv.json
+(bench_bconv), BENCH_rotation.json (bench_rotation), BENCH_serve.json
+(bench_serve — serving throughput/batching invariants); see the bench-gate
+job in .github/workflows/ci.yml for the canonical pairing.
 """
 import argparse
 import json

@@ -34,11 +34,16 @@ def main() -> None:
         from benchmarks import bench_limbdup_hlo
         sections.append(("Fig. 7 from compiled HLO", bench_limbdup_hlo.main))
     if not args.skip_measured:
-        from benchmarks import bench_ntt
-        # writes the machine-readable BENCH_ntt.json (before/after wall-clock
-        # + ops counts) used to track the perf trajectory across PRs
+        from benchmarks import bench_ntt, bench_serve
+        # machine-readable BENCH_*.json candidates go to /tmp — the committed
+        # repo-root baselines are the CI comparison targets and must only be
+        # refreshed deliberately (full-rep runs, see README)
         sections.append(("NTT micro-bench (measured)",
-                         lambda: bench_ntt.main(["--quick"])))
+                         lambda: bench_ntt.main(
+                             ["--quick", "--out", "/tmp/BENCH_ntt.json"])))
+        sections.append(("FHE serving throughput (measured)",
+                         lambda: bench_serve.main(
+                             ["--quick", "--out", "/tmp/BENCH_serve.json"])))
 
     for title, fn in sections:
         print(f"\n### {title}")

@@ -1,0 +1,64 @@
+"""Multi-tenant FHE serving demo: batched scheduling over the CKKS core.
+
+    PYTHONPATH=src python examples/serving_demo.py
+
+Two tenants with independent secret keys submit encrypted
+multiply-rotate-accumulate requests; the serving engine batches the
+same-shaped ops of different requests into single stacked kernel dispatches
+(one tensor product + ONE ModDown for a whole wave of HMults, one fused
+AutoU∘KS launch per tenant's rotation group), keeps each tenant's evks
+device-resident through the key store, and reuses cached plans — zero
+constant uploads once warm.  Decrypted results are checked per tenant.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import const_cache, encoding as enc, keys as K, params as prm
+from repro.serve import (FheServeEngine, TenantKeyStore, standard_reference,
+                         standard_request)
+
+p = prm.make_params(N=1 << 10, L=4, K=2, dnum=2)
+print(f"CKKS params: N={p.N}, L={p.L}, dnum={p.dnum}")
+
+store = TenantKeyStore(max_resident=4)
+for i, tenant in enumerate(("alice", "bob")):
+    store.register(tenant, K.keygen(p, rotations=(1,), seed=i))
+
+
+def make_request(tenant: str, seed: int):
+    return standard_request(p, store.keyset(tenant), tenant, seed)
+
+
+engine = FheServeEngine(store, max_batch=8)
+requests = []
+for i in range(8):
+    req, z = make_request("alice" if i % 2 == 0 else "bob", 100 + i)
+    assert engine.submit(req)
+    requests.append((req, z))
+
+engine.run_until_drained()
+print(f"served: {engine.summary()}")
+
+for req, (z1, z2) in requests:
+    ks = store.keyset(req.tenant)
+    out = req.result()["out"]
+    got = enc.decode(K.decrypt(out, ks.sk), out.scale, out.basis, p.N, 8)
+    err = float(np.max(np.abs(got.real - standard_reference(z1, z2))))
+    assert err < 1e-2, f"req {req.rid}: err {err}"
+print("all decrypted results match plaintext math")
+
+# steady state: a second identical wave stages nothing and builds no plans
+before = const_cache.stage_events()
+misses = engine.plans.misses
+for i in range(8):
+    req, _ = make_request("alice" if i % 2 == 0 else "bob", 300 + i)
+    engine.submit(req)
+engine.run_until_drained()
+uploads = const_cache.stage_events_since(before)
+builds = engine.plans.misses - misses
+print(f"steady-state wave: {uploads} const uploads, {builds} plan builds")
+assert uploads == 0 and builds == 0
+print("OK")

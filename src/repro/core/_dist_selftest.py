@@ -52,7 +52,7 @@ def main() -> None:
         from repro.kernels.bconv import ref as bref
         c = nttm.stacked_ntt_consts(basis, N)
         want = np.asarray(nttm.ntt(jnp.asarray(x), c))
-        with jax.set_mesh(mesh):
+        with D.mesh_context(mesh):
             got = np.asarray(D.run_dist_ntt(mesh, jnp.asarray(x), basis))
             back = np.asarray(D.run_dist_ntt(mesh, jnp.asarray(got), basis,
                                              forward=False))
@@ -61,7 +61,7 @@ def main() -> None:
         R = 16
         perm = D.ntt_layout_perm(N, R)
         cperm = D.coef_layout_perm(N, R, cm.block_size)
-        with jax.set_mesh(mesh):
+        with D.mesh_context(mesh):
             got4 = np.asarray(D.run_dist_ntt_fourstep(
                 mesh, jnp.asarray(x[:, cperm]), basis, R))
             back4 = np.asarray(D.run_dist_ntt_fourstep(
@@ -69,7 +69,7 @@ def main() -> None:
         assert np.array_equal(got4, want[:, perm]), "four-step layout"
         assert np.array_equal(back4, x[:, cperm]), "four-step inverse"
         want_bc = bref.bconv_ref(x, basis, dst)
-        with jax.set_mesh(mesh):
+        with D.mesh_context(mesh):
             g1 = np.asarray(D.dist_bconv_ark(mesh, jnp.asarray(x), basis, dst))
             g2 = np.asarray(D.dist_bconv_limbdup(mesh, jnp.asarray(x), basis, dst))
         assert np.array_equal(g1, want_bc), "bconv ark"
@@ -87,7 +87,7 @@ def main() -> None:
         ntt_spec = jax.ShapeDtypeStruct((ntt_ell, N), jnp.uint32)
 
         def measure(fn, in_spec=spec):
-            with jax.set_mesh(mesh):
+            with D.mesh_context(mesh):
                 comp = jax.jit(fn, in_shardings=sharding).lower(in_spec).compile()
             return hlo.collective_summary(comp.as_text())
 

@@ -542,6 +542,147 @@ def hrot_by_progression(ct: Ciphertext, step: int, count: int,
 
 
 # ----------------------------------------------------------------------------
+# Cross-ciphertext batched ops (the serve batcher's dispatch targets)
+#
+# Each *_many op stacks B independent ciphertexts on a leading axis and rides
+# the existing leading-dim-batched machinery — the flattened (P, ℓ) eltwise
+# grid, the stacked ModUp/BConv/ModDown chains, :func:`hrot_many`'s fused
+# AutoU∘KS — so a whole serving batch of one HE op family is a constant
+# number of kernel launches instead of B copies of the single-ciphertext
+# chain.  Every op here is BIT-EXACT versus its per-ciphertext counterpart:
+# the stacked arithmetic is the same element-wise modular math, only the
+# dispatch granularity changes (gated by ``BENCH_serve.json``).
+# ----------------------------------------------------------------------------
+
+def _stack_polys(ps: list[pl.RnsPoly]) -> pl.RnsPoly:
+    """B same-basis polys → one (B, ℓ, N) NTT-domain poly."""
+    ntt = [p.to_ntt() for p in ps]
+    return pl.RnsPoly(jnp.stack([p.data for p in ntt]), ntt[0].basis, pl.NTT)
+
+
+def _unstack(p: pl.RnsPoly, i: int) -> pl.RnsPoly:
+    return pl.RnsPoly(p.data[i], p.basis, p.domain)
+
+
+def _check_same_basis(cts: list[Ciphertext], op: str) -> None:
+    basis = cts[0].basis
+    assert all(c.basis == basis for c in cts), \
+        f"{op}: all batched ciphertexts must share one basis (level)"
+
+
+def hadd_many(c1s: list[Ciphertext], c2s: list[Ciphertext],
+              sub: bool = False) -> list[Ciphertext]:
+    """B pairwise HAdd/HSub in ONE stacked dispatch per component."""
+    assert len(c1s) == len(c2s)
+    if not c1s:
+        return []
+    _check_same_basis(c1s + c2s, "hadd_many")
+    for c1, c2 in zip(c1s, c2s):
+        assert abs(c1.scale - c2.scale) / c1.scale < 1e-3, \
+            f"scale mismatch {c1.scale} vs {c2.scale}"
+    x1 = _stack_polys([c.a for c in c1s] + [c.b for c in c1s])
+    x2 = _stack_polys([c.a for c in c2s] + [c.b for c in c2s])
+    if _use_fused():
+        from repro.kernels.eltwise import ops as elt_ops
+        out = pl.RnsPoly(
+            elt_ops.eltwise("sub" if sub else "add", x1.basis, x1.data, x2.data),
+            x1.basis, pl.NTT)
+    else:
+        out = (x1 - x2) if sub else (x1 + x2)
+    B = len(c1s)
+    return [Ciphertext(_unstack(out, i), _unstack(out, B + i), c1s[i].scale)
+            for i in range(B)]
+
+
+def pmult_many(cts: list[Ciphertext], pts: list[pl.RnsPoly],
+               pt_scales: list[float]) -> list[Ciphertext]:
+    """B ciphertext × (per-request) plaintext products, one stacked dispatch.
+
+    The 2B component·plaintext products (a_i⊙p_i, b_i⊙p_i) flatten into one
+    EFU kernel grid on the fused engine.
+    """
+    assert len(cts) == len(pts) == len(pt_scales)
+    if not cts:
+        return []
+    _check_same_basis(cts, "pmult_many")
+    x = _stack_polys([c.a for c in cts] + [c.b for c in cts])
+    p = _stack_polys(pts + pts)
+    trace.record("elt_mul", len(x.basis), cts[0].a.N, 2 * len(cts))
+    if _use_fused():
+        from repro.kernels.eltwise import ops as elt_ops
+        out = pl.RnsPoly(elt_ops.eltwise("mul", x.basis, x.data, p.data),
+                         x.basis, pl.NTT)
+    else:
+        out = x * p
+    B = len(cts)
+    return [Ciphertext(_unstack(out, i), _unstack(out, B + i),
+                       cts[i].scale * pt_scales[i]) for i in range(B)]
+
+
+def hmult_many(c1s: list[Ciphertext], c2s: list[Ciphertext],
+               keys: KeySet) -> list[Ciphertext]:
+    """B pairwise HMults sharing ONE stacked tensor product + key-switch.
+
+    The tensor products batch over a (B, ℓ, N) leading dim (two EFU launches
+    total on the fused engine), and the B relinearizations collapse into one
+    stacked ModUp → evk inner product → ONE ModDown — the same per-digit evk
+    broadcasts against every request's d₂.
+    """
+    assert len(c1s) == len(c2s)
+    if not c1s:
+        return []
+    _check_same_basis(c1s + c2s, "hmult_many")
+    for _ in c1s:
+        trace.record_he("HMult")
+    a1 = _stack_polys([c.a for c in c1s])
+    b1 = _stack_polys([c.b for c in c1s])
+    a2 = _stack_polys([c.a for c in c2s])
+    b2 = _stack_polys([c.b for c in c2s])
+    d0, d1, d2 = _tensor_products(a1, b1, a2, b2)       # each (B, ℓ, N)
+    ka, kb = key_switch(d2, keys.relin, keys.params)
+    out_a, out_b = d1 + ka, d0 + kb
+    return [Ciphertext(_unstack(out_a, i), _unstack(out_b, i),
+                       c1s[i].scale * c2s[i].scale) for i in range(len(c1s))]
+
+
+def square_many(cts: list[Ciphertext], keys: KeySet) -> list[Ciphertext]:
+    """B squarings batched like :func:`hmult_many`."""
+    if not cts:
+        return []
+    _check_same_basis(cts, "square_many")
+    a = _stack_polys([c.a for c in cts])
+    b = _stack_polys([c.b for c in cts])
+    d0, d1, d2 = _tensor_products(a, b, a, b)
+    ka, kb = key_switch(d2, keys.relin, keys.params)
+    out_a, out_b = d1 + ka, d0 + kb
+    return [Ciphertext(_unstack(out_a, i), _unstack(out_b, i),
+                       cts[i].scale * cts[i].scale) for i in range(len(cts))]
+
+
+def rescale_many(cts: list[Ciphertext], params: CkksParams,
+                 times: int | None = None) -> list[Ciphertext]:
+    """B rescales in one stacked top-limb-drop chain per prime.
+
+    All 2B components (a_i, b_i) ride the leading axes of the iNTT /
+    centered-lift / re-NTT / q_ℓ⁻¹ chain — the same launch count as ONE
+    single-ciphertext rescale.
+    """
+    if not cts:
+        return []
+    times = params.rescale_primes if times is None else times
+    _check_same_basis(cts, "rescale_many")
+    a = _stack_polys([c.a for c in cts])
+    b = _stack_polys([c.b for c in cts])
+    scales = [c.scale for c in cts]
+    for _ in range(times):
+        ql = a.basis[-1]
+        a, b, _ = _rescale_once(a, b, 0.0)
+        scales = [s / ql for s in scales]
+    return [Ciphertext(_unstack(a, i), _unstack(b, i), scales[i])
+            for i in range(len(cts))]
+
+
+# ----------------------------------------------------------------------------
 # Rescaling (paper §II-B / §III-C double-prime variant)
 # ----------------------------------------------------------------------------
 

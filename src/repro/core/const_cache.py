@@ -81,6 +81,23 @@ def stage_events() -> int:
     return _stage_events
 
 
+def record_stage(n: int = 1) -> None:
+    """Count ``n`` externally-performed host→device staging transfers.
+
+    Device-resident state that is staged *outside* this module's builders —
+    the serve keystore's evk digit-key stacks, for instance — reports its
+    uploads here so ``stage_events()`` stays the single steady-state-upload
+    metric every bench gate reads.
+    """
+    global _stage_events
+    _stage_events += n
+
+
+def stage_events_since(snapshot: int) -> int:
+    """Uploads since a ``stage_events()`` snapshot."""
+    return _stage_events - snapshot
+
+
 def _stage(x):
     global _stage_events
     if isinstance(x, np.ndarray):

@@ -49,6 +49,46 @@ from .mapping import ClusterMap
 
 POLY_SPEC = P("limb", "coef")
 
+# ``jax.shard_map`` graduated from ``jax.experimental.shard_map`` in newer
+# releases (renaming ``check_rep`` → ``check_vma`` along the way); resolve
+# whichever the pinned version provides once at import.
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_04x
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _shard_map_04x(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma)
+
+
+def _axis_size(mesh, name: str) -> int:
+    """Static mesh-axis size inside a shard_map body, version-portable.
+
+    ``lax.axis_size`` only exists on newer jax; the mesh the program was
+    built against gives the same (static) answer on every version — and the
+    reshape arithmetic in the four-step NTT needs a Python int, not a traced
+    value, so the dynamic ``psum(1, axis)`` fallback is not an option.
+    """
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(name)
+    return mesh.shape[name]
+
+
+def mesh_context(mesh):
+    """Version-portable ``with jax.set_mesh(mesh):`` (jax ≥ 0.6 API).
+
+    Older pinned jax (0.4.x) has no ``jax.set_mesh``; there the ``Mesh``
+    object itself is the context manager that installs the thread-local
+    resource env consumed by ``with_sharding_constraint(x, PartitionSpec)``.
+    Every ambient-mesh region in this repo (dry-runs, selftests) enters
+    through this helper so the call sites stay identical across versions.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
 
 def _local_consts(c: nttm.NttConsts):
     """NttConsts fields as jnp arrays (shard_map operands)."""
@@ -76,7 +116,7 @@ def dist_ntt(mesh, basis: tuple[int, ...], N: int, forward: bool = True):
     # per-limb tables follow the POST-a2a limb ownership: ℓ split over both axes
     tab_spec = P(("limb", "coef"), None)
     specs = (POLY_SPEC,) + (tab_spec,) * 11 + (P(None),)
-    sm = jax.shard_map(fn, mesh=mesh, in_specs=specs, out_specs=POLY_SPEC,
+    sm = shard_map(fn, mesh=mesh, in_specs=specs, out_specs=POLY_SPEC,
                        check_vma=False)
     return sm, _local_consts(c)
 
@@ -102,7 +142,7 @@ def dist_ntt_fourstep(mesh, basis: tuple[int, ...], N: int, R: int,
         col = _consts_from(flat[:12])
         tw, tws, rowp, rowps, q, brev_c = flat[12:]
         ell_loc = x.shape[0]
-        cs = lax.axis_size("coef")
+        cs = _axis_size(mesh, "coef")
         A = x.reshape(ell_loc, R, C // cs)           # full n₁, local n₂ slice
         A = jnp.moveaxis(A, -1, -3)
         A = nttm.ntt(A, col)                         # local column phase
@@ -117,7 +157,7 @@ def dist_ntt_fourstep(mesh, basis: tuple[int, ...], N: int, R: int,
         col = _consts_from(flat[:12])
         twi, twis, rowpi, rowpis, cinv, cinvs, q, brev_c = flat[12:]
         ell_loc = x.shape[0]
-        cs = lax.axis_size("coef")
+        cs = _axis_size(mesh, "coef")
         B = x.reshape(ell_loc, R // cs, C)
         B = nttm._cyclic_dft(B, rowpi, rowpis, brev_c, q)
         B = mm.mulmod_shoup(B, cinv[..., None], cinvs[..., None], q[..., None])
@@ -153,7 +193,7 @@ def dist_ntt_fourstep(mesh, basis: tuple[int, ...], N: int, R: int,
         ]
         body = inv
     specs = (POLY_SPEC,) + col_specs + tuple(s for _, s in extra)
-    sm = jax.shard_map(body, mesh=mesh, in_specs=specs, out_specs=POLY_SPEC,
+    sm = shard_map(body, mesh=mesh, in_specs=specs, out_specs=POLY_SPEC,
                        check_vma=False)
     consts = _local_consts(fc.col) + tuple(a for a, _ in extra)
     return sm, consts
@@ -227,7 +267,7 @@ def dist_bconv_ark(mesh, x, src: tuple[int, ...], dst: tuple[int, ...]):
         return lax.all_to_all(out, "limb", split_axis=0, concat_axis=1,
                               tiled=True)           # (K/L_c, N_c): back to blocks
 
-    sm = jax.shard_map(
+    sm = shard_map(
         fn, mesh=mesh,
         in_specs=(POLY_SPEC, P(None), P(None), P(None), P(None), P(None)),
         out_specs=POLY_SPEC, check_vma=False)
@@ -253,7 +293,7 @@ def dist_bconv_limbdup(mesh, x, src: tuple[int, ...], dst: tuple[int, ...]):
         return _modmatmul(sl(table), sl(table_s), t_full,
                           sl(qd)[:, 0], sl(mu_hi)[:, 0], sl(mu_lo)[:, 0])
 
-    sm = jax.shard_map(
+    sm = shard_map(
         fn, mesh=mesh,
         in_specs=(POLY_SPEC, P(None), P(None), P(None), P(None), P(None)),
         out_specs=POLY_SPEC, check_vma=False)

@@ -84,6 +84,14 @@ class EvalKey:
             self._level_cache[key] = out
         return out
 
+    def drop_level_cache(self) -> None:
+        """Release the per-level device slices AND the regenerated a-halves
+        (serve keystore eviction); the stored b-halves and the PRNG seed
+        remain — the a-halves rebuild deterministically on next use, which
+        is the whole point of the PRNG evk (§V-B)."""
+        self._level_cache = None
+        self._a_cache = None
+
     def bytes_logical(self) -> int:
         n = sum(int(np.prod(p.data.shape)) for p in self.b) * 4
         return 2 * n                 # a + b halves
@@ -130,6 +138,15 @@ class KeySet:
                 self._stack_cache.pop(next(iter(self._stack_cache)))
             out = self._stack_cache[key] = (A, B)
         return out
+
+    def drop_device_caches(self) -> None:
+        """Release every device-staged evk form — the stacked galois digit
+        keys and all per-level slices.  The serve keystore calls this on
+        tenant eviction; the next acquisition re-stages transparently."""
+        self._stack_cache.clear()
+        self.relin.drop_level_cache()
+        for ek in self.galois.values():
+            ek.drop_level_cache()
 
 
 def _digit_interp_factors(params: CkksParams) -> list[list[int]]:

@@ -117,3 +117,41 @@ def launch_counts() -> dict:
 
 def total_launches() -> int:
     return sum(_launches.values())
+
+
+def reset_launches() -> None:
+    """Zero every per-family counter (bench/test isolation)."""
+    _launches.clear()
+
+
+def launches_since(snapshot: dict) -> dict:
+    """Per-family launch deltas versus a :func:`launch_counts` snapshot
+    (families with a zero delta are omitted)."""
+    return {fam: n - snapshot.get(fam, 0) for fam, n in _launches.items()
+            if n - snapshot.get(fam, 0)}
+
+
+class count_region:
+    """Context manager capturing the per-family launch deltas of a region.
+
+    The serve metrics and the benchmarks used to hand-roll
+    snapshot-before/subtract-after pairs at every measurement site::
+
+        with config.count_region() as c:
+            workload()
+        c.deltas            # {"bconv": 6, "auto_ks": 2, ...}
+        c.total             # sum over families
+    """
+
+    def __enter__(self):
+        self._before = launch_counts()
+        self.deltas: dict = {}
+        return self
+
+    def __exit__(self, *exc):
+        self.deltas = launches_since(self._before)
+        return False
+
+    @property
+    def total(self) -> int:
+        return sum(self.deltas.values())

@@ -31,6 +31,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from repro import optim  # noqa: E402
 from repro.launch import hlo  # noqa: E402
 from repro.launch import specs as S  # noqa: E402
+from repro.models.sharding import mesh_context  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models import registry  # noqa: E402
 from repro.train import TrainStepConfig, make_train_step  # noqa: E402
@@ -155,7 +156,7 @@ def lower_cell(cfg, mesh, cell: S.Cell, compile_: bool = True,
         args = (pshape, tok_sds, cshape, pos_sds)
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered = jitted.lower(*args)
         if not compile_:
             return {"lower_only": True}, time.time() - t0

@@ -78,7 +78,7 @@ def run_cell(mesh_kind: str, policy_name: str, ell: int,
            "limb_clusters": limb_clusters, "batch": batch}
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh):
+        with D.mesh_context(mesh):
             compiled = jax.jit(fn, in_shardings=shd).lower(*sds).compile()
         rec.update(hlo.analyze_compiled(compiled))
         rec["ok"] = True

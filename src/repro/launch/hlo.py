@@ -122,6 +122,8 @@ def collective_summary(hlo_text: str) -> dict[str, float]:
 def analyze_compiled(compiled) -> dict:
     """cost/memory/collective metrics of one compiled executable (per device)."""
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):     # jax 0.4.x: one dict per program
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     txt = compiled.as_text()
     return {

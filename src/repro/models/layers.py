@@ -318,7 +318,8 @@ def set_logical_axes(dp=("pod", "data"), tp="model"):
 
 def maybe_shard(x, *spec):
     """with_sharding_constraint if an abstract mesh is active (no-op else)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    from .sharding import abstract_mesh
+    mesh = abstract_mesh()
     if mesh is None or not mesh.shape:
         return x
     from jax.sharding import PartitionSpec as P

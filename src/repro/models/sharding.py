@@ -21,6 +21,39 @@ import re
 import jax
 from jax.sharding import PartitionSpec as P
 
+
+# -- jax mesh-API compatibility ----------------------------------------------
+#
+# The ambient-mesh API moved twice across jax releases: ``jax.set_mesh`` /
+# ``jax.sharding.get_abstract_mesh`` exist only on newer jax, while the
+# pinned 0.4.x line installs the thread-local mesh by entering the ``Mesh``
+# object itself.  These two shims are the only places the repo touches the
+# version-sensitive surface (``repro.core.distributed.mesh_context`` is the
+# core-side twin for FHE launchers that never import the model stack).
+
+def mesh_context(mesh):
+    """Version-portable ``with jax.set_mesh(mesh):``."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
+def abstract_mesh():
+    """The active ambient mesh, or None — works on old and new jax.
+
+    New jax: ``jax.sharding.get_abstract_mesh()``.  Old jax: the thread-local
+    physical mesh installed by ``with mesh:`` (empty → None, matching the
+    new API's "no mesh" sentinel as consumed by ``layers.maybe_shard``).
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        return get()
+    from jax._src import mesh as _mesh_lib
+    m = _mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
 # (regex on path, spec builder taking (data_axis, model_axis))
 _RULES = [
     # embeddings / head

@@ -1,5 +1,29 @@
-"""Serving substrate: batched prefill + decode engine over the per-family
-caches (linear KV, sliding-window ring, SSD/mLSTM/sLSTM states)."""
-from .engine import ServeEngine
+"""Multi-tenant FHE serving subsystem (plus the legacy LM decode engine).
 
-__all__ = ["ServeEngine"]
+The serving layer above the CKKS kernels: an admission queue with
+deadlines/priorities, a batcher stacking same-shaped HE ops from different
+requests into single kernel dispatches, a per-tenant key store with LRU evk
+residency, a plan cache for zero steady-state re-resolution, and metrics
+tying throughput to the deterministic launch/upload counters.
+
+    from repro.serve import (FheServeEngine, FheRequest, HeOp,
+                             TenantKeyStore, standard_program)
+
+The token-decode :class:`~repro.serve.engine.ServeEngine` for the LM
+substrate remains importable from its historical location.
+"""
+from .engine import ServeEngine
+from .fhe import FheServeEngine
+from .ir import (BATCHED_KINDS, OP_KINDS, FheRequest, HeOp,
+                 standard_program, standard_reference, standard_request)
+from .keystore import TenantKeyStore, UnknownTenant
+from .metrics import ServeMetrics
+from .plans import Plan, PlanCache
+from .scheduler import AdmissionQueue, QueueFull
+
+__all__ = [
+    "AdmissionQueue", "BATCHED_KINDS", "FheRequest", "FheServeEngine",
+    "HeOp", "OP_KINDS", "Plan", "PlanCache", "QueueFull", "ServeEngine",
+    "ServeMetrics", "TenantKeyStore", "UnknownTenant", "standard_program",
+    "standard_reference", "standard_request",
+]

@@ -1,4 +1,8 @@
-"""Batched serving engine: continuous-batching-lite over the family caches.
+"""Legacy LM decode engine: continuous-batching-lite over the family caches.
+
+(The FHE serving subsystem lives in :mod:`repro.serve.fhe` and friends;
+this module serves the token-decode substrate and keeps its historical
+import path.)
 
 Requests join a fixed-size slot table; each engine step decodes one token for
 every active slot (one jitted decode_step over the whole batch).  Finished or

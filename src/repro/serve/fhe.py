@@ -1,0 +1,154 @@
+"""FheServeEngine: the multi-tenant, ciphertext-batched FHE serving engine.
+
+Composition of the serve subsystem (ROADMAP north star: sustained HE
+throughput above the kernel layer):
+
+* :class:`~repro.serve.scheduler.AdmissionQueue` — deadline/priority
+  admission with bounded capacity;
+* :class:`~repro.serve.keystore.TenantKeyStore` — per-tenant evk residency
+  (LRU, per-step upload budget);
+* :class:`~repro.serve.batcher.Batcher` — same-shaped ops from DIFFERENT
+  requests stacked into one kernel dispatch;
+* :class:`~repro.serve.plans.PlanCache` — per-(op, level, batch, tenant)
+  executors, resolved once;
+* :class:`~repro.serve.metrics.ServeMetrics` — request + deterministic
+  dispatch accounting.
+
+One :meth:`step` = fill the active slot set from the queue (respecting the
+keystore's upload budget), take every active request's current op, group,
+dispatch each group once, advance program counters, retire finished
+requests.  Requests running the same program stay in lockstep and batch
+perfectly; heterogeneous traffic batches opportunistically per op family.
+
+``batching=False`` gives the sequential baseline: identical scheduling and
+identical per-op arithmetic, but every op dispatches alone — the comparand
+for the ≥3× throughput gate and the bit-exactness check in
+``benchmarks/bench_serve.py``.
+"""
+from __future__ import annotations
+
+import time
+
+from .batcher import Batcher
+from .ir import FheRequest
+from .keystore import TenantKeyStore
+from .metrics import ServeMetrics
+from .plans import PlanCache
+from .scheduler import AdmissionQueue, QueueFull
+
+
+class FheServeEngine:
+    def __init__(self, keystore: TenantKeyStore, max_batch: int = 16,
+                 batching: bool = True, queue_capacity: int = 1024,
+                 clock=None):
+        self.keystore = keystore
+        self.max_batch = max_batch
+        self.queue = AdmissionQueue(capacity=queue_capacity)
+        self.plans = PlanCache()
+        self.metrics = ServeMetrics()
+        self.batcher = Batcher(keystore, self.plans, batching=batching)
+        self.active: list[FheRequest] = []
+        self.completed: list[FheRequest] = []
+        self._clock = clock if clock is not None else time.monotonic
+
+    # -- submission -----------------------------------------------------------
+
+    def submit(self, req: FheRequest) -> bool:
+        """Admit a request; False = rejected (queue full / unknown tenant /
+        unsupported rotation)."""
+        try:
+            self.keystore.keyset(req.tenant)
+        except KeyError:
+            self.metrics.rejected += 1
+            return False
+        for op in req.program:
+            if op.kind == "hrot" and not (
+                    isinstance(op.arg, int)
+                    and self.keystore.supports_rotation(req.tenant, op.arg)):
+                self.metrics.rejected += 1
+                return False
+            if op.kind == "conjugate" and not self.keystore.supports_conjugate(
+                    req.tenant):
+                self.metrics.rejected += 1
+                return False
+            if op.kind == "pmult" and op.arg not in req.plaintexts:
+                self.metrics.rejected += 1
+                return False
+        try:
+            self.queue.push(req)
+        except QueueFull:
+            self.metrics.rejected += 1
+            return False
+        req.admitted_at = self._clock()
+        self.metrics.admitted += 1
+        return True
+
+    # -- engine loop ----------------------------------------------------------
+
+    def _fill_slots(self) -> None:
+        deferred = []
+        while self.queue and len(self.active) + len(deferred) < self.max_batch:
+            if not self.keystore.can_admit(self.queue.peek().tenant):
+                # step upload budget spent: leave cold-tenant work queued
+                # unless nothing is active at all (liveness beats budget)
+                if self.active or deferred:
+                    break
+            req = self.queue.pop()
+            self.keystore.acquire(req.tenant)
+            req.started_at = self._clock()
+            req.env = dict(req.inputs)
+            req.pc = 0
+            self.metrics.wait_time += req.started_at - req.admitted_at
+            if not req.program:             # nothing to run: retire directly
+                self._finish(req, req.started_at)
+                continue
+            deferred.append(req)
+        self.active.extend(deferred)
+
+    def _finish(self, req: FheRequest, now: float) -> None:
+        req.done = True
+        req.finished_at = now
+        self.metrics.served += 1
+        self.metrics.serve_time += now - req.admitted_at
+        if req.finished_at > req.deadline:
+            self.metrics.missed_deadlines += 1
+        self.completed.append(req)
+
+    def step(self) -> int:
+        """One serving iteration; returns the number of ops executed."""
+        self.keystore.begin_step()
+        self._fill_slots()
+        if not self.active:
+            return 0
+        self.metrics.steps += 1
+        ready = [(r, r.next_op) for r in self.active]
+        groups = self.batcher.form_groups(ready)
+        for group in groups:
+            self.batcher.execute(group)
+            self.metrics.groups_dispatched += 1
+            self.metrics.ops_executed += len(group)
+            if len(group) >= 2:
+                self.metrics.ops_batched += len(group)
+        still = []
+        now = self._clock()
+        for req in self.active:
+            req.pc += 1
+            if req.pc >= len(req.program):
+                self._finish(req, now)
+            else:
+                still.append(req)
+        self.active = still
+        return len(ready)
+
+    def run_until_drained(self, max_steps: int = 100_000) -> list[FheRequest]:
+        """Serve until queue and active set are empty; returns completions."""
+        for _ in range(max_steps):
+            if not self.step() and not self.queue:
+                break
+        return self.completed
+
+    # -- reporting ------------------------------------------------------------
+
+    def summary(self) -> dict:
+        return self.metrics.summary(plan_stats=self.plans.stats(),
+                                    key_uploads=self.keystore.uploads)

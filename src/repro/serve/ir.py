@@ -1,0 +1,140 @@
+"""Request IR for the multi-tenant FHE serving subsystem.
+
+A serving request is a straight-line program of primitive HE ops over named
+ciphertext registers.  The IR is deliberately tiny — just enough structure
+for the batcher to group *same-shaped ops from different requests* into one
+stacked kernel dispatch (see :mod:`repro.serve.batcher`): each op names its
+kind, destination register, source registers, and an optional immediate
+(rotation amount, scalar, plaintext key).
+
+Programs are per-request; tenants own the key material (see
+:mod:`repro.serve.keystore`).  Requests carry deadlines and priorities for
+the admission queue (:mod:`repro.serve.scheduler`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Any
+
+from repro.core.keys import Ciphertext
+
+# kinds the batcher knows how to stack across requests; anything else falls
+# back to per-request execution (still correct, just unbatched)
+BATCHED_KINDS = frozenset(
+    {"hadd", "hsub", "pmult", "hmult", "square", "rescale", "hrot"})
+OP_KINDS = BATCHED_KINDS | frozenset(
+    {"conjugate", "mul_const", "add_const"})
+
+
+@dataclasses.dataclass(frozen=True)
+class HeOp:
+    """One primitive HE op: ``dst = kind(*srcs, arg)``.
+
+    arg semantics per kind: ``hrot`` → rotation amount (int), ``pmult`` →
+    plaintext key into the request's plaintext table, ``mul_const`` /
+    ``add_const`` → float scalar, ``rescale`` → prime count (None = params
+    default).
+    """
+    kind: str
+    dst: str
+    srcs: tuple[str, ...] = ()
+    arg: Any = None
+
+    def __post_init__(self):
+        if self.kind not in OP_KINDS:
+            raise ValueError(f"unknown HE op kind {self.kind!r}")
+
+
+_rid_counter = itertools.count()
+
+
+@dataclasses.dataclass
+class FheRequest:
+    """One tenant request: inputs + program + requested output registers."""
+    tenant: str
+    program: tuple[HeOp, ...]
+    inputs: dict[str, Ciphertext]
+    outputs: tuple[str, ...]
+    deadline: float = math.inf              # absolute engine-clock deadline
+    priority: int = 0                       # higher = more urgent
+    plaintexts: dict = dataclasses.field(default_factory=dict)
+    rid: int = dataclasses.field(default_factory=lambda: next(_rid_counter))
+
+    # -- runtime state (owned by the engine) ----------------------------------
+    pc: int = 0
+    env: dict = dataclasses.field(default_factory=dict)
+    done: bool = False
+    admitted_at: float = math.nan
+    started_at: float = math.nan
+    finished_at: float = math.nan
+
+    def __post_init__(self):
+        self.program = tuple(self.program)
+        regs = set(self.inputs)
+        for op in self.program:
+            missing = [s for s in op.srcs if s not in regs]
+            if missing:
+                raise ValueError(
+                    f"request {self.rid}: op {op.kind} reads undefined "
+                    f"register(s) {missing}")
+            regs.add(op.dst)
+        missing = [o for o in self.outputs if o not in regs]
+        if missing:
+            raise ValueError(
+                f"request {self.rid}: outputs {missing} never written")
+
+    @property
+    def next_op(self) -> HeOp | None:
+        return self.program[self.pc] if self.pc < len(self.program) else None
+
+    def result(self) -> dict[str, Ciphertext]:
+        assert self.done, "request not finished"
+        return {name: self.env[name] for name in self.outputs}
+
+
+def standard_program() -> tuple[HeOp, ...]:
+    """The canonical serving pipeline used by the demo/bench/tests: an
+    encrypted multiply-rotate-accumulate over two input ciphertexts —
+    one op of every hot family (HMult+relin, RS, HRot via fused AutoU∘KS,
+    HAdd)."""
+    return (
+        HeOp("hmult", "prod", ("x", "y")),
+        HeOp("rescale", "prod", ("prod",)),
+        HeOp("hrot", "rot", ("prod",), arg=1),
+        HeOp("hadd", "out", ("rot", "prod")),
+    )
+
+
+def standard_reference(z1, z2):
+    """Expected plaintext result of :func:`standard_program` on slot
+    vectors z1, z2 (the slot after the message window holds an encoded
+    zero, so the rotate-left-by-1 shifts one in).  Kept next to the program
+    so the demo/launcher/bench never hand-copy the formula."""
+    import numpy as np
+    prod = np.asarray(z1) * np.asarray(z2)
+    return prod + np.append(prod[1:], 0.0)
+
+
+def standard_request(params, keyset, tenant: str, seed: int,
+                     slots: int = 8) -> tuple["FheRequest", tuple]:
+    """Seeded :func:`standard_program` request under the tenant's key.
+
+    Returns ``(request, (z1, z2))`` — the plaintext inputs so callers can
+    check the decrypted output against :func:`standard_reference`.
+    """
+    import numpy as np
+
+    from repro.core import encoding as enc
+    from repro.core import keys as keys_mod
+    scale = float(params.q[-1])
+    rng = np.random.default_rng(seed)
+    z1 = rng.normal(size=slots)
+    z2 = rng.normal(size=slots)
+    ct = lambda z: keys_mod.encrypt(
+        enc.encode(z, scale, params.q, params.N), scale, keyset.sk,
+        params.q, params.N, rng=rng)
+    req = FheRequest(tenant=tenant, program=standard_program(),
+                     inputs={"x": ct(z1), "y": ct(z2)}, outputs=("out",))
+    return req, (z1, z2)

@@ -1,0 +1,128 @@
+"""Per-tenant key store with LRU residency and an upload-count budget.
+
+Each tenant registers a :class:`~repro.core.keys.KeySet` once.  Making a
+tenant *resident* stages its evaluation keys for the kernel paths — the
+relin digit keys via ``EvalKey.at_level`` and the galois stacks via
+``KeySet.galois_stacked`` — and every staging transfer is reported to
+:func:`repro.core.const_cache.record_stage`, so the serve layer's
+zero-steady-state-uploads gate reads the same counter as every other bench.
+
+Residency is LRU-bounded (``max_resident`` tenants); evicting a tenant drops
+its device-resident evk slices/stacks (the host-side key material stays
+registered, so re-admission just re-stages).  A per-step **upload budget**
+caps how many staging transfers admission may trigger in one engine step —
+the thrash guard: when a step's budget is spent, requests from non-resident
+tenants wait in the queue rather than evicting a hot tenant's keys.
+"""
+from __future__ import annotations
+
+import collections
+
+from repro.core import const_cache
+from repro.core import poly as pl
+from repro.core.keys import KeySet
+
+
+class UnknownTenant(KeyError):
+    pass
+
+
+class TenantKeyStore:
+    def __init__(self, max_resident: int = 8,
+                 step_upload_budget: int | None = None):
+        assert max_resident >= 1
+        self.max_resident = max_resident
+        self.step_upload_budget = step_upload_budget
+        self._registered: dict[str, KeySet] = {}
+        self._resident: collections.OrderedDict[str, int] = \
+            collections.OrderedDict()          # tenant → staged buffer count
+        self.uploads = 0                       # total staging transfers
+        self.evictions = 0
+        self._step_uploads = 0
+
+    # -- registration ---------------------------------------------------------
+
+    def register(self, tenant: str, keyset: KeySet) -> None:
+        self._registered[tenant] = keyset
+
+    def keyset(self, tenant: str) -> KeySet:
+        """The registered key material WITHOUT touching residency (metadata
+        reads: params, available rotations)."""
+        try:
+            return self._registered[tenant]
+        except KeyError:
+            raise UnknownTenant(tenant) from None
+
+    def tenants(self) -> list[str]:
+        return list(self._registered)
+
+    def is_resident(self, tenant: str) -> bool:
+        return tenant in self._resident
+
+    # -- residency / staging --------------------------------------------------
+
+    def begin_step(self) -> None:
+        """Reset the per-step upload budget (called once per engine step)."""
+        self._step_uploads = 0
+
+    def can_admit(self, tenant: str) -> bool:
+        """True if serving this tenant now fits the step's upload budget."""
+        if tenant in self._resident:
+            return True
+        if self.step_upload_budget is None:
+            return True
+        return self._step_uploads < self.step_upload_budget
+
+    def acquire(self, tenant: str) -> KeySet:
+        """The tenant's KeySet, staged and LRU-touched.
+
+        First acquisition (or first after eviction) stages the evk material
+        and counts the transfers; steady-state acquisitions are free.
+        """
+        ks = self.keyset(tenant)
+        if tenant in self._resident:
+            self._resident.move_to_end(tenant)
+            return ks
+        n = self._stage(ks)
+        self.uploads += n
+        self._step_uploads += n
+        const_cache.record_stage(n)
+        self._resident[tenant] = n
+        while len(self._resident) > self.max_resident:
+            victim, _ = self._resident.popitem(last=False)
+            self._registered[victim].drop_device_caches()
+            self.evictions += 1
+        return ks
+
+    def _stage(self, ks: KeySet) -> int:
+        """Warm the device-resident evk forms used by the serving hot path:
+        the full-rotation-set galois stack and the relin key's top-level
+        slice.  Returns the number of staging transfers performed."""
+        params = ks.params
+        ell = params.L
+        idx = tuple(range(ell)) + tuple(params.L + k for k in range(params.K))
+        basis = params.q[:ell] + params.p
+        ndig = len(params.digit_bases(ell))
+        n = 0
+        gelts = tuple(sorted(ks.galois))
+        if gelts:
+            ks.galois_stacked(gelts, idx, basis, ndig)
+            # one stacked (A, B) pair per rotation key
+            n += 2 * len(gelts)
+        ks.relin.at_level(idx, basis, ndig)
+        n += 2 * ndig                          # (a_j, b_j) per digit
+        return n
+
+    # -- convenience ----------------------------------------------------------
+
+    def galois_elements(self, tenant: str) -> set[int]:
+        return set(self.keyset(tenant).galois)
+
+    def supports_rotation(self, tenant: str, r: int) -> bool:
+        ks = self.keyset(tenant)
+        N = ks.params.N
+        return r % (N // 2) == 0 or pl.galois_elt(r, N) in ks.galois
+
+    def supports_conjugate(self, tenant: str) -> bool:
+        ks = self.keyset(tenant)
+        return 2 * ks.params.N - 1 in ks.galois

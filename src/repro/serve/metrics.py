@@ -1,0 +1,64 @@
+"""Serving metrics: request accounting + deterministic dispatch counters.
+
+Wall-clock latencies live next to *deterministic* counters — per-family
+kernel-launch deltas (:mod:`repro.kernels.config`) and constant/evk staging
+events (:func:`repro.core.const_cache.stage_events`) — because the CI gate
+can only enforce the deterministic ones (``BENCH_serve.json``): launches per
+request must fall as batch size grows, and a warm steady state must upload
+nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import const_cache
+from repro.kernels import config as kconfig
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    admitted: int = 0
+    rejected: int = 0
+    served: int = 0
+    missed_deadlines: int = 0
+    steps: int = 0
+    groups_dispatched: int = 0
+    ops_executed: int = 0
+    ops_batched: int = 0                 # ops that shared a group of size ≥ 2
+    wait_time: float = 0.0               # admission → first execution
+    serve_time: float = 0.0              # admission → completion
+
+    _launch_snap: dict = dataclasses.field(default_factory=dict, repr=False)
+    _stage_snap: int = 0
+
+    def begin_region(self) -> None:
+        """Open a measurement region for launch/upload deltas."""
+        self._launch_snap = kconfig.launch_counts()
+        self._stage_snap = const_cache.stage_events()
+
+    def region(self) -> dict:
+        """Deltas since :meth:`begin_region`."""
+        return {
+            "kernel_launches": kconfig.launches_since(self._launch_snap),
+            "const_uploads": const_cache.stage_events_since(self._stage_snap),
+        }
+
+    def summary(self, plan_stats: dict | None = None,
+                key_uploads: int | None = None) -> dict:
+        out = {
+            "admitted": self.admitted,
+            "rejected": self.rejected,
+            "served": self.served,
+            "missed_deadlines": self.missed_deadlines,
+            "steps": self.steps,
+            "groups_dispatched": self.groups_dispatched,
+            "ops_executed": self.ops_executed,
+            "ops_batched": self.ops_batched,
+            "mean_wait": self.wait_time / max(1, self.served),
+            "mean_serve_time": self.serve_time / max(1, self.served),
+        }
+        if plan_stats is not None:
+            out["plan_cache"] = plan_stats
+        if key_uploads is not None:
+            out["key_uploads"] = key_uploads
+        return out

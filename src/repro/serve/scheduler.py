@@ -1,0 +1,45 @@
+"""Admission queue for the FHE serving engine.
+
+Earliest-deadline-first within priority class: requests pop in
+``(-priority, deadline, submission order)`` order, so urgent tenants are
+never starved by a long tail of lax-deadline work and ties break FIFO.
+Admission is bounded — a full queue rejects instead of growing without
+bound (the engine surfaces rejects in its metrics so load shedding is
+visible, not silent).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+
+from .ir import FheRequest
+
+
+class QueueFull(Exception):
+    """Raised by :meth:`AdmissionQueue.push` when at capacity."""
+
+
+class AdmissionQueue:
+    def __init__(self, capacity: int = 1024):
+        self.capacity = capacity
+        self._heap: list = []
+        self._seq = itertools.count()
+
+    def push(self, req: FheRequest) -> None:
+        if len(self._heap) >= self.capacity:
+            raise QueueFull(
+                f"admission queue at capacity ({self.capacity})")
+        heapq.heappush(self._heap,
+                       (-req.priority, req.deadline, next(self._seq), req))
+
+    def pop(self) -> FheRequest:
+        return heapq.heappop(self._heap)[-1]
+
+    def peek(self) -> FheRequest:
+        return self._heap[0][-1]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

@@ -1,0 +1,275 @@
+"""Fast tests for the multi-tenant FHE serving subsystem.
+
+Covers the four serve-layer guarantees the bench gates on, at test scale:
+batched-vs-sequential bit-exactness per op family, keystore LRU residency
+with zero steady-state uploads, plan-cache hit accounting, and the
+admission queue's deadline/priority ordering.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import const_cache, encoding as enc
+from repro.core import keys as K
+from repro.core import params as prm
+from repro.serve import (AdmissionQueue, FheRequest, FheServeEngine, HeOp,
+                         QueueFull, TenantKeyStore, standard_program)
+
+N, L = 1 << 9, 4
+TENANTS = ("alice", "bob")
+
+PROGRAM_A = standard_program()            # hmult → rescale → hrot → hadd
+PROGRAM_B = (                             # hsub → square → rescale → pmult
+    HeOp("hsub", "d", ("x", "y")),
+    HeOp("square", "s", ("x",)),
+    HeOp("rescale", "s", ("s",)),
+    HeOp("pmult", "out", ("s",), arg="pt"),
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    p = prm.make_params(N=N, L=L, K=2, dnum=2)
+    store = TenantKeyStore(max_resident=len(TENANTS))
+    for i, t in enumerate(TENANTS):
+        store.register(t, K.keygen(p, rotations=(1,), seed=i))
+    return p, store
+
+
+def _request(p, store, tenant, seed, program, outputs):
+    ks = store.keyset(tenant)
+    scale = float(p.q[-1])
+    rng = np.random.default_rng(seed)
+    z1, z2 = rng.normal(size=8), rng.normal(size=8)
+    x = K.encrypt(enc.encode(z1, scale, p.q, p.N), scale, ks.sk, p.q, p.N,
+                  rng=rng)
+    y = K.encrypt(enc.encode(z2, scale, p.q, p.N), scale, ks.sk, p.q, p.N,
+                  rng=rng)
+    pts = {}
+    if any(op.kind == "pmult" for op in program):
+        zp = rng.normal(size=8)
+        import jax.numpy as jnp
+
+        from repro.core import poly as pl
+        pts["pt"] = (pl.RnsPoly(jnp.asarray(
+            enc.encode(zp, scale, p.q[:L - 1], p.N)), p.q[:L - 1], pl.COEFF),
+            scale)
+    return FheRequest(tenant=tenant, program=program, inputs={"x": x, "y": y},
+                      outputs=outputs, plaintexts=pts)
+
+
+def _mixed_wave(p, store, base_seed):
+    """6 requests: A/B programs alternating across both tenants."""
+    reqs = []
+    for i in range(6):
+        prog = PROGRAM_A if i % 2 == 0 else PROGRAM_B
+        reqs.append(_request(p, store, TENANTS[i % 2], base_seed + i,
+                             prog, ("out",)))
+    return reqs
+
+
+def _bits(ct):
+    return (np.asarray(ct.a.to_ntt().data), np.asarray(ct.b.to_ntt().data))
+
+
+# ----------------------------------------------------------------------------
+# batched vs sequential bit-exactness (every op family, mixed tenants)
+# ----------------------------------------------------------------------------
+
+def test_batched_matches_sequential_bitexact(setup):
+    p, store = setup
+    batched = FheServeEngine(store, max_batch=6)
+    seq = FheServeEngine(store, max_batch=1, batching=False)
+    wave_b = _mixed_wave(p, store, 100)
+    wave_s = _mixed_wave(p, store, 100)
+    for rb, rs in zip(wave_b, wave_s):
+        assert batched.submit(rb) and seq.submit(rs)
+    batched.run_until_drained()
+    seq.run_until_drained()
+    assert batched.metrics.served == seq.metrics.served == 6
+    # batching actually happened (some group held ≥ 2 ops) while the
+    # sequential engine dispatched strictly singleton groups
+    assert batched.metrics.ops_batched > 0
+    assert seq.metrics.ops_batched == 0
+    for rb, rs in zip(wave_b, wave_s):
+        (ba, bb), (sa, sb) = _bits(rb.result()["out"]), _bits(rs.result()["out"])
+        assert np.array_equal(ba, sa) and np.array_equal(bb, sb)
+        assert rb.result()["out"].scale == rs.result()["out"].scale
+
+
+def test_decrypted_result_matches_plaintext_math(setup):
+    p, store = setup
+    eng = FheServeEngine(store, max_batch=4)
+    reqs = [_request(p, store, TENANTS[i % 2], 200 + i, PROGRAM_A, ("out",))
+            for i in range(4)]
+    zs = []
+    for i in range(4):
+        rng = np.random.default_rng(200 + i)
+        zs.append((rng.normal(size=8), rng.normal(size=8)))
+        eng.submit(reqs[i])
+    eng.run_until_drained()
+    for req, (z1, z2) in zip(reqs, zs):
+        ks = store.keyset(req.tenant)
+        out = req.result()["out"]
+        got = enc.decode(K.decrypt(out, ks.sk), out.scale, out.basis, p.N, 8)
+        prod = z1 * z2
+        want = prod + np.append(prod[1:], 0.0)
+        assert np.max(np.abs(got.real - want)) < 1e-2
+
+
+# ----------------------------------------------------------------------------
+# keystore: LRU eviction, upload counting, steady-state zero uploads
+# ----------------------------------------------------------------------------
+
+def test_keystore_lru_eviction_and_upload_accounting(setup):
+    p, _ = setup
+    store = TenantKeyStore(max_resident=2)
+    for i, t in enumerate(("t0", "t1", "t2")):
+        store.register(t, K.keygen(p, rotations=(1,), seed=10 + i))
+
+    before = const_cache.stage_events()
+    store.acquire("t0")
+    up0 = store.uploads
+    assert up0 > 0
+    # keystore staging is reported into the shared stage-event counter
+    assert const_cache.stage_events_since(before) == up0
+
+    store.acquire("t1")
+    assert store.uploads == 2 * up0
+    # steady state: resident tenants re-acquire for free
+    store.acquire("t0")
+    store.acquire("t1")
+    assert store.uploads == 2 * up0 and store.evictions == 0
+
+    # third tenant evicts the LRU one (touch order t0, t1, t0, t1 → LRU = t0)
+    store.acquire("t2")
+    assert store.evictions == 1
+    assert not store.is_resident("t0")
+    assert store.is_resident("t1") and store.is_resident("t2")
+    # re-acquiring the evicted tenant re-stages (counted again)
+    store.acquire("t0")
+    assert store.uploads == 4 * up0
+
+
+def test_keystore_step_upload_budget(setup):
+    p, _ = setup
+    store = TenantKeyStore(max_resident=4, step_upload_budget=1)
+    for i, t in enumerate(("t0", "t1")):
+        store.register(t, K.keygen(p, rotations=(1,), seed=20 + i))
+    store.begin_step()
+    assert store.can_admit("t0")
+    store.acquire("t0")
+    # budget spent: a second cold tenant must wait for the next step
+    assert not store.can_admit("t1")
+    assert store.can_admit("t0")            # resident stays admissible
+    store.begin_step()
+    assert store.can_admit("t1")
+
+
+def test_zero_steady_state_uploads_and_plan_hits(setup):
+    p, store = setup
+    eng = FheServeEngine(store, max_batch=6)
+    for r in _mixed_wave(p, store, 300):
+        eng.submit(r)
+    eng.run_until_drained()                  # warm wave: stages + builds plans
+    builds = eng.plans.misses
+    assert builds > 0
+
+    before = const_cache.stage_events()
+    for r in _mixed_wave(p, store, 400):
+        eng.submit(r)
+    eng.run_until_drained()
+    # steady state: zero constant/evk uploads, zero plan builds, only hits
+    assert const_cache.stage_events_since(before) == 0
+    assert eng.plans.misses == builds
+    assert eng.plans.hits > 0
+
+
+def test_plan_cache_keys_on_batch_size(setup):
+    p, store = setup
+    eng = FheServeEngine(store, max_batch=6)
+    for r in _mixed_wave(p, store, 500):
+        eng.submit(r)
+    eng.run_until_drained()
+    builds = eng.plans.misses
+    # a different wave size forms different-size groups → new plans
+    eng2_reqs = [_request(p, store, "alice", 600, PROGRAM_A, ("out",))]
+    for r in eng2_reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    assert eng.plans.misses > builds
+
+
+# ----------------------------------------------------------------------------
+# admission queue: deadline/priority ordering, bounded capacity
+# ----------------------------------------------------------------------------
+
+def _dummy_request(deadline=math.inf, priority=0):
+    return FheRequest(tenant="t", program=(), inputs={}, outputs=(),
+                      deadline=deadline, priority=priority)
+
+
+def test_admission_queue_deadline_ordering():
+    q = AdmissionQueue()
+    late = _dummy_request(deadline=30.0)
+    early = _dummy_request(deadline=10.0)
+    mid = _dummy_request(deadline=20.0)
+    for r in (late, early, mid):
+        q.push(r)
+    assert [q.pop() for _ in range(3)] == [early, mid, late]
+
+
+def test_admission_queue_priority_beats_deadline():
+    q = AdmissionQueue()
+    lax_urgent = _dummy_request(deadline=100.0, priority=5)
+    tight_normal = _dummy_request(deadline=1.0, priority=0)
+    q.push(tight_normal)
+    q.push(lax_urgent)
+    assert q.pop() is lax_urgent
+    assert q.pop() is tight_normal
+
+
+def test_admission_queue_fifo_ties_and_capacity():
+    q = AdmissionQueue(capacity=2)
+    a, b = _dummy_request(), _dummy_request()
+    q.push(a)
+    q.push(b)
+    with pytest.raises(QueueFull):
+        q.push(_dummy_request())
+    assert q.pop() is a and q.pop() is b
+
+
+def test_engine_rejects_and_deadline_metrics(setup):
+    p, store = setup
+    fake_time = [0.0]
+    eng = FheServeEngine(store, max_batch=2, queue_capacity=2,
+                         clock=lambda: fake_time[0])
+    # unknown tenant and unsupported rotation are rejected up front
+    bad = _request(p, store, "alice", 700, PROGRAM_A, ("out",))
+    bad.tenant = "nobody"
+    assert not eng.submit(bad)
+    no_key = _request(p, store, "alice", 701,
+                      (HeOp("hrot", "out", ("x",), arg=3),), ("out",))
+    assert not eng.submit(no_key)
+    # conjugate without a conjugation key is rejected at admission too
+    no_conj = _request(p, store, "alice", 704,
+                       (HeOp("conjugate", "out", ("x",)),), ("out",))
+    assert not eng.submit(no_conj)
+    assert eng.metrics.rejected == 3
+
+    # an empty program is legal and retires at admission without dispatch
+    empty = FheRequest(tenant="alice", program=(), inputs={}, outputs=())
+    assert eng.submit(empty)
+    eng.run_until_drained()
+    assert empty.done and eng.metrics.served == 1
+
+    ontime = _request(p, store, "alice", 702, PROGRAM_A, ("out",))
+    ontime.deadline = 1e9
+    missed = _request(p, store, "bob", 703, PROGRAM_A, ("out",))
+    missed.deadline = 0.5
+    assert eng.submit(ontime) and eng.submit(missed)
+    fake_time[0] = 1.0                       # past `missed`'s deadline
+    eng.run_until_drained()
+    assert eng.metrics.served == 3           # empty + ontime + missed
+    assert eng.metrics.missed_deadlines == 1
