@@ -1,0 +1,303 @@
+"""Chaos benchmark: serving goodput and zero-wrong-answer guarantees under
+deterministic fault injection (EXPERIMENTS.md §Chaos).
+
+Drives the FheServeEngine through seeded fault plans
+(:mod:`repro.runtime.faults`) at the three modeled fault sites — kernel-launch
+aborts, staging-upload failures, and limb bit-flip corruption — and measures
+what the resilience layer (:mod:`repro.serve.resilience`) buys:
+
+  * **goodput**: fraction of submitted requests served correctly.  The
+    resilient engine (bounded retry + poison quarantine + group splits) is
+    compared against an UNPROTECTED baseline whose blast radius is the whole
+    stacked group — the behavior without the machinery;
+  * **zero wrong answers**: every request that reports "ok" must decrypt to
+    the plaintext reference; everything else must carry a typed terminal
+    status.  This holds at EVERY fault rate — corruption is quarantined
+    (``REPRO_GUARDS=full`` residue scans), never returned;
+  * **tenant isolation**: a tenant whose key staging faults persistently is
+    degraded alone; the other tenant's traffic is untouched and no healthy
+    resident tenant is evicted by the failed upload;
+  * **determinism**: the same plan over the same workload fires at the same
+    events and yields the same per-request statuses — replayable chaos;
+  * **guard overhead**: ``REPRO_GUARDS=cheap`` (the default) must cost ≤5 %
+    against ``off`` on the fault-free serving path, and adds zero kernel
+    launches / uploads (deterministic).
+
+All gate quantities except the overhead ratio are deterministic: fault draws
+come from per-spec seeded streams and the engine's control flow is
+synchronous, so CI replays the exact same chaos.
+
+    PYTHONPATH=src python -m benchmarks.bench_chaos [--quick] [--out PATH]
+                                                    [--rates 0.01 0.05]
+"""
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import const_cache, encoding as enc, guards
+from repro.core import keys as K
+from repro.core import params as prm
+from repro.kernels import config as kconfig
+from repro.runtime import faults
+from repro.serve import (FheServeEngine, RetryPolicy, TenantKeyStore,
+                         standard_reference, standard_request)
+
+DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_chaos.json"
+
+TENANTS = ("tenant0", "tenant1")
+WAVE = 8
+TOL = 1e-2
+
+
+class UnprotectedEngine(FheServeEngine):
+    """The no-resilience comparand: a fault fails EVERY request in the
+    stacked group (full blast radius — no retry, no split, no quarantine)."""
+
+    def _split_or_quarantine(self, group, depth, reason, exc):
+        return [(req, "failed", f"{reason}: {exc}") for req, _ in group]
+
+
+def _setup(N: int, L: int):
+    p = prm.make_params(N=N, L=L, K=2, dnum=2)
+    store = TenantKeyStore(max_resident=len(TENANTS))
+    for i, t in enumerate(TENANTS):
+        store.register(t, K.keygen(p, rotations=(1,), seed=i))
+    return p, store
+
+
+def _wave(eng, p, store, base_seed):
+    """Submit WAVE standard requests; returns [(req, (z1, z2)), ...]."""
+    out = []
+    for i in range(WAVE):
+        t = TENANTS[i % len(TENANTS)]
+        req, zs = standard_request(p, store.keyset(t), t, base_seed + i)
+        assert eng.submit(req)
+        out.append((req, zs))
+    return out
+
+
+def _verify(p, store, served):
+    """Count wrong answers among requests reporting "ok"."""
+    wrong = 0
+    for req, (z1, z2) in served:
+        ks = store.keyset(req.tenant)
+        out = req.result()["out"]
+        got = enc.decode(K.decrypt(out, ks.sk), out.scale, out.basis, p.N,
+                         len(z1))
+        if np.max(np.abs(got.real - standard_reference(z1, z2))) >= TOL:
+            wrong += 1
+    return wrong
+
+
+TERMINAL = frozenset({"ok", "rejected", "timeout", "failed", "shed"})
+
+
+def run_scenario(p, store, plan_dict, *, engine_cls=FheServeEngine,
+                 retries=3, guard_mode="cheap", base_seed=5000):
+    """One chaos run: warm wave (fault-free), then a chaotic wave under the
+    plan.  Returns goodput/answer-rate/correctness/fault accounting."""
+    eng = engine_cls(store, max_batch=WAVE,
+                     retry=RetryPolicy(max_retries=retries, base_delay=1e-4,
+                                       max_delay=1e-3),
+                     sleeper=lambda d: None)      # don't sleep in benches
+    _wave(eng, p, store, base_seed)               # warm: compile + stage
+    eng.run_until_drained()
+
+    reqs = _wave(eng, p, store, base_seed + 100)
+    plan = faults.FaultPlan.from_dict(plan_dict)
+    with guards.use_mode(guard_mode), faults.inject(plan) as inj:
+        eng.run_until_drained()
+
+    ok = [(r, z) for r, z in reqs if r.status == "ok"]
+    wrong = _verify(p, store, ok)
+    m = eng.metrics
+    return {
+        "plan": plan.to_dict(),
+        "submitted": len(reqs),
+        "served": len(ok),
+        "goodput": len(ok) / len(reqs),
+        "wrong_answers": wrong,
+        "all_terminal": all(r.done and r.status in TERMINAL
+                            for r, _ in reqs),
+        "statuses": [r.status for r, _ in reqs],
+        "fired": dict(inj.fired),
+        "fired_log": [list(x) for x in inj.fired_log],
+        "transient_faults": m.transient_faults,
+        "retries": m.retries,
+        "quarantined": m.quarantined,
+        "group_splits": m.group_splits,
+        "health": m.health,
+    }
+
+
+def measure_guard_overhead(p, store, reps):
+    """min-of-reps wall-clock for a fault-free wave under guards off vs
+    cheap (interleaved), plus the DETERMINISTIC check that cheap guards add
+    zero kernel launches and zero uploads."""
+    engines = {m: FheServeEngine(store, max_batch=WAVE) for m in
+               ("off", "cheap")}
+    for mode, eng in engines.items():
+        with guards.use_mode(mode):
+            _wave(eng, p, store, 7000)
+            eng.run_until_drained()               # warm
+    times = {"off": [], "cheap": []}
+    launches = {}
+    uploads = {}
+    for rep in range(reps):
+        for mode, eng in engines.items():         # interleaved A/B/A/B…
+            with guards.use_mode(mode):
+                _wave(eng, p, store, 7000 + rep + 1)
+                before_up = const_cache.stage_events()
+                with kconfig.count_region() as c:
+                    t0 = time.perf_counter()
+                    eng.run_until_drained()
+                    times[mode].append(time.perf_counter() - t0)
+                launches[mode] = sum(c.deltas.values())
+                uploads[mode] = const_cache.stage_events_since(before_up)
+    overhead = min(times["cheap"]) / min(times["off"]) - 1.0
+    return {
+        "off_s": min(times["off"]),
+        "cheap_s": min(times["cheap"]),
+        "overhead_pct": 100.0 * overhead,
+        "cheap_extra_launches": launches["cheap"] - launches["off"],
+        "cheap_extra_uploads": uploads["cheap"] - uploads["off"],
+    }
+
+
+def staging_scenario(p, N, L):
+    """Persistent staging faults while tenant0 goes cold → tenant0 degrades;
+    tenant1 must be untouched (isolation + no-eviction regression)."""
+    store = TenantKeyStore(max_resident=len(TENANTS))
+    for i, t in enumerate(TENANTS):
+        store.register(t, K.keygen(p, rotations=(1,), seed=i))
+    eng = FheServeEngine(store, max_batch=WAVE, retry=RetryPolicy(),
+                         sleeper=lambda d: None)
+    reqs = _wave(eng, p, store, 6000)
+    # every staging transfer fails while tenant0 stages; tenant1's acquire
+    # happens after the plan's max_fires budget is spent, so it stages clean
+    plan = faults.FaultPlan.from_dict(
+        {"seed": 11, "specs": [{"site": "stage", "rate": 1.0,
+                                "max_fires": 2}]})
+    with faults.inject(plan):
+        eng.run_until_drained()
+    t0 = [(r, z) for r, z in reqs if r.tenant == TENANTS[0]]
+    t1 = [(r, z) for r, z in reqs if r.tenant == TENANTS[1]]
+    wrong = _verify(p, store, [(r, z) for r, z in reqs if r.status == "ok"])
+    return {
+        "degraded": sorted(store.degraded),
+        "staging_retries": store.staging_retries,
+        "t0_statuses": [r.status for r, _ in t0],
+        "t1_all_served": all(r.status == "ok" for r, _ in t1),
+        "wrong_answers": wrong,
+        "healthy_tenant_evicted": store.evictions > 0,
+        "all_terminal": all(r.done and r.status in TERMINAL
+                            for r, _ in reqs),
+        "isolated": (store.degraded == {TENANTS[0]}
+                     and all(r.status == "ok" for r, _ in t1)
+                     and all(r.status != "ok" for r, _ in t0)
+                     and store.evictions == 0),
+    }
+
+
+def run(reps: int, N: int, L: int, rates) -> dict:
+    p, store = _setup(N, L)
+
+    launch = {}
+    for rate in rates:
+        plan = {"seed": 7, "specs": [{"site": "launch", "rate": rate}]}
+        launch[rate] = {
+            "resilient": run_scenario(p, store, plan),
+            "unprotected": run_scenario(p, store, plan,
+                                        engine_cls=UnprotectedEngine,
+                                        retries=0),
+        }
+
+    bitflip = run_scenario(
+        p, store, {"seed": 13, "specs": [{"site": "bitflip", "rate": 0.25}]},
+        guard_mode="full")
+
+    det_a = run_scenario(
+        p, store, {"seed": 21, "specs": [{"site": "launch", "rate": 0.02}]})
+    det_b = run_scenario(
+        p, store, {"seed": 21, "specs": [{"site": "launch", "rate": 0.02}]})
+    deterministic = (det_a["fired_log"] == det_b["fired_log"]
+                     and det_a["statuses"] == det_b["statuses"])
+
+    staging = staging_scenario(p, N, L)
+    overhead = measure_guard_overhead(p, store, reps)
+
+    scenarios = ([v["resilient"] for v in launch.values()]
+                 + [v["unprotected"] for v in launch.values()]
+                 + [bitflip, det_a, det_b])
+    wrong_total = (sum(s["wrong_answers"] for s in scenarios)
+                   + staging["wrong_answers"])
+    all_terminal = (all(s["all_terminal"] for s in scenarios)
+                    and staging["all_terminal"])
+    r0 = min(rates)
+    out = {
+        "bench": "chaos",
+        "params": {"N": p.N, "L": p.L, "dnum": p.dnum,
+                   "tenants": len(TENANTS), "wave": WAVE, "reps": reps,
+                   "rates": list(rates)},
+        "launch_faults": {str(r): v for r, v in launch.items()},
+        "bitflip": bitflip,
+        "staging": staging,
+        "guard_overhead": overhead,
+        "gate": {
+            # booleans: invariants; numbers: must not grow vs baseline
+            "zero_wrong_answers": bool(wrong_total == 0),
+            "all_requests_terminal": bool(all_terminal),
+            "goodput_lowest_rate_ge_90pct":
+                bool(launch[r0]["resilient"]["goodput"] >= 0.90),
+            "resilient_beats_unprotected": bool(all(
+                v["resilient"]["goodput"] > v["unprotected"]["goodput"]
+                for v in launch.values())),
+            "bitflip_all_quarantined": bool(
+                bitflip["fired"].get("bitflip", 0) >= 1
+                and bitflip["quarantined"]
+                    >= bitflip["fired"].get("bitflip", 0)
+                and bitflip["wrong_answers"] == 0),
+            "degraded_tenant_isolated": bool(staging["isolated"]),
+            "fault_plan_deterministic": bool(deterministic),
+            "guard_cheap_overhead_le_5pct":
+                bool(overhead["overhead_pct"] <= 5.0),
+            "guard_cheap_zero_extra_launches": bool(
+                overhead["cheap_extra_launches"] == 0
+                and overhead["cheap_extra_uploads"] == 0),
+            "wrong_answers_total": wrong_total,
+        },
+    }
+    return out
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer overhead reps (CI); default 3")
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    ap.add_argument("--N", type=int, default=1 << 9)
+    ap.add_argument("--L", type=int, default=4)
+    ap.add_argument("--rates", type=float, nargs="+", default=[0.01, 0.05],
+                    help="per-launch fault rates (nightly sweeps pass "
+                         "higher rates)")
+    args = ap.parse_args(argv)
+    res = run(reps=2 if args.quick else 3, N=args.N, L=args.L,
+              rates=tuple(args.rates))
+    args.out.write_text(json.dumps(res, indent=1, sort_keys=True) + "\n")
+    print(json.dumps(res["gate"], indent=1))
+    print(f"wrote {args.out}")
+    failed = [k for k, v in res["gate"].items()
+              if isinstance(v, bool) and v is not True]
+    if failed:
+        raise RuntimeError(f"chaos gate invariants failed: {failed}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -19,8 +19,10 @@ machines, so timing lives in the artifact for trend inspection only.
 
 Registered gates: BENCH_ntt.json (bench_ntt), BENCH_bconv.json
 (bench_bconv), BENCH_rotation.json (bench_rotation), BENCH_serve.json
-(bench_serve — serving throughput/batching invariants); see the bench-gate
-job in .github/workflows/ci.yml for the canonical pairing.
+(bench_serve — serving throughput/batching invariants), BENCH_chaos.json
+(bench_chaos — fault-injection resilience: zero wrong answers, goodput
+under faults, deterministic replay, tenant isolation, guard overhead); see
+the bench-gate job in .github/workflows/ci.yml for the canonical pairing.
 """
 import argparse
 import json

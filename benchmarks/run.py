@@ -34,7 +34,7 @@ def main() -> None:
         from benchmarks import bench_limbdup_hlo
         sections.append(("Fig. 7 from compiled HLO", bench_limbdup_hlo.main))
     if not args.skip_measured:
-        from benchmarks import bench_ntt, bench_serve
+        from benchmarks import bench_chaos, bench_ntt, bench_serve
         # machine-readable BENCH_*.json candidates go to /tmp — the committed
         # repo-root baselines are the CI comparison targets and must only be
         # refreshed deliberately (full-rep runs, see README)
@@ -44,6 +44,9 @@ def main() -> None:
         sections.append(("FHE serving throughput (measured)",
                          lambda: bench_serve.main(
                              ["--quick", "--out", "/tmp/BENCH_serve.json"])))
+        sections.append(("FHE serving under fault injection (chaos)",
+                         lambda: bench_chaos.main(
+                             ["--quick", "--out", "/tmp/BENCH_chaos.json"])))
 
     for title, fn in sections:
         print(f"\n### {title}")

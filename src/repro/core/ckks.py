@@ -20,6 +20,7 @@ import numpy as np
 
 from . import bconv as bc
 from . import const_cache
+from . import guards
 from . import poly as pl
 from . import trace
 from .keys import Ciphertext, EvalKey, KeySet
@@ -145,6 +146,10 @@ def key_switch(d: pl.RnsPoly, evk: EvalKey,
 # ----------------------------------------------------------------------------
 
 def hadd(c1: Ciphertext, c2: Ciphertext) -> Ciphertext:
+    guards.check_basis_match(c1.basis, c2.basis, "hadd")
+    guards.check_scale_match(c1.scale, c2.scale, "hadd")
+    guards.check_ciphertext(c1, "hadd")
+    guards.check_ciphertext(c2, "hadd")
     # tolerate the small multiplicative scale drift of ~2⁻¹³ per rescale that
     # single-prime test chains accumulate (primes differ by ≲0.01 %)
     assert abs(c1.scale - c2.scale) / c1.scale < 1e-3, \
@@ -153,11 +158,16 @@ def hadd(c1: Ciphertext, c2: Ciphertext) -> Ciphertext:
 
 
 def hsub(c1: Ciphertext, c2: Ciphertext) -> Ciphertext:
+    guards.check_basis_match(c1.basis, c2.basis, "hsub")
+    guards.check_ciphertext(c1, "hsub")
+    guards.check_ciphertext(c2, "hsub")
     return Ciphertext(c1.a - c2.a, c1.b - c2.b, c1.scale)
 
 
 def pmult(ct: Ciphertext, pt: pl.RnsPoly, pt_scale: float) -> Ciphertext:
     """ct ⊙ plaintext (NTT domain)."""
+    guards.check_basis_match(ct.basis, pt.basis, "pmult")
+    guards.check_ciphertext(ct, "pmult")
     p = pt.to_ntt()
     return Ciphertext(ct.a.to_ntt() * p, ct.b.to_ntt() * p, ct.scale * pt_scale)
 
@@ -192,6 +202,10 @@ def _tensor_products(a1: pl.RnsPoly, b1: pl.RnsPoly,
 
 def hmult(c1: Ciphertext, c2: Ciphertext, keys: KeySet) -> Ciphertext:
     """HMult = (a₁b₂+a₂b₁, b₁b₂) + KS(a₁a₂, evk_×); rescale NOT included."""
+    guards.check_basis_match(c1.basis, c2.basis, "hmult")
+    guards.check_level(c1.basis, 2, "hmult")
+    guards.check_ciphertext(c1, "hmult")
+    guards.check_ciphertext(c2, "hmult")
     trace.record_he("HMult")
     a1, b1 = c1.a.to_ntt(), c1.b.to_ntt()
     a2, b2 = c2.a.to_ntt(), c2.b.to_ntt()
@@ -201,6 +215,8 @@ def hmult(c1: Ciphertext, c2: Ciphertext, keys: KeySet) -> Ciphertext:
 
 
 def square(ct: Ciphertext, keys: KeySet) -> Ciphertext:
+    guards.check_level(ct.basis, 2, "square")
+    guards.check_ciphertext(ct, "square")
     a, b = ct.a.to_ntt(), ct.b.to_ntt()
     d0, d1, d2 = _tensor_products(a, b, a, b)
     ka, kb = key_switch(d2, keys.relin, keys.params)
@@ -209,17 +225,20 @@ def square(ct: Ciphertext, keys: KeySet) -> Ciphertext:
 
 def hrot(ct: Ciphertext, r: int, keys: KeySet) -> Ciphertext:
     """HRot = (0, φ_r(b)) + KS(φ_r(a), evk_r): rotates slots left by r."""
+    guards.check_ciphertext(ct, "hrot")
     g = pl.galois_elt(r, ct.a.N)
     return _rot_by_gelt(ct, g, keys)
 
 
 def conjugate(ct: Ciphertext, keys: KeySet) -> Ciphertext:
+    guards.check_ciphertext(ct, "conjugate")
     return _rot_by_gelt(ct, 2 * ct.a.N - 1, keys)
 
 
 def mul_const(ct: Ciphertext, value: float, params: CkksParams) -> Ciphertext:
     """ct × scalar with drift-free scale: the constant is encoded at exactly
     the level's top prime, so the following rescale restores ct.scale."""
+    guards.check_level(ct.basis, 2, "mul_const")
     trace.record_he("PMultConst")
     q_top = float(ct.basis[-1])
     enc = np.array([round(value * q_top) % q for q in ct.basis],
@@ -282,6 +301,7 @@ def match_scale(ct: Ciphertext, target_scale: float,
     f = target_scale / ct.scale
     if abs(f - 1.0) < 1e-9:
         return ct
+    guards.check_level(ct.basis, 2, "match_scale")
     q_top = ct.basis[-1]
     e = max(1, round(f * q_top))
     enc = np.array([e % q for q in ct.basis], dtype=np.uint32)
@@ -485,6 +505,7 @@ def hrot_many(cts: list[Ciphertext], rotations: list[int],
     assert len(cts) == len(rotations)
     if not cts:
         return []
+    _check_cts(cts, "hrot_many")
     N = cts[0].a.N
     if not _use_fused():
         return [Ciphertext(c.a, c.b, c.scale) if r % (N // 2) == 0
@@ -566,8 +587,19 @@ def _unstack(p: pl.RnsPoly, i: int) -> pl.RnsPoly:
 
 def _check_same_basis(cts: list[Ciphertext], op: str) -> None:
     basis = cts[0].basis
+    for c in cts:
+        guards.check_basis_match(basis, c.basis, op)
     assert all(c.basis == basis for c in cts), \
         f"{op}: all batched ciphertexts must share one basis (level)"
+
+
+def _check_cts(cts: list[Ciphertext], op: str) -> None:
+    """Full-mode corruption scan of a batch's operands, one ct at a time so
+    the raised error identifies the poisoned batch member (the serve layer's
+    quarantine replay relies on singleton re-execution pinpointing it)."""
+    if guards.full():
+        for i, c in enumerate(cts):
+            guards.check_ciphertext(c, f"{op}[{i}]")
 
 
 def hadd_many(c1s: list[Ciphertext], c2s: list[Ciphertext],
@@ -577,7 +609,9 @@ def hadd_many(c1s: list[Ciphertext], c2s: list[Ciphertext],
     if not c1s:
         return []
     _check_same_basis(c1s + c2s, "hadd_many")
+    _check_cts(c1s + c2s, "hadd_many")
     for c1, c2 in zip(c1s, c2s):
+        guards.check_scale_match(c1.scale, c2.scale, "hadd_many")
         assert abs(c1.scale - c2.scale) / c1.scale < 1e-3, \
             f"scale mismatch {c1.scale} vs {c2.scale}"
     x1 = _stack_polys([c.a for c in c1s] + [c.b for c in c1s])
@@ -605,6 +639,9 @@ def pmult_many(cts: list[Ciphertext], pts: list[pl.RnsPoly],
     if not cts:
         return []
     _check_same_basis(cts, "pmult_many")
+    _check_cts(cts, "pmult_many")
+    for i, (c, pt) in enumerate(zip(cts, pts)):
+        guards.check_basis_match(c.basis, pt.basis, f"pmult_many[{i}]")
     x = _stack_polys([c.a for c in cts] + [c.b for c in cts])
     p = _stack_polys(pts + pts)
     trace.record("elt_mul", len(x.basis), cts[0].a.N, 2 * len(cts))
@@ -632,6 +669,8 @@ def hmult_many(c1s: list[Ciphertext], c2s: list[Ciphertext],
     if not c1s:
         return []
     _check_same_basis(c1s + c2s, "hmult_many")
+    guards.check_level(c1s[0].basis, 2, "hmult_many")
+    _check_cts(c1s + c2s, "hmult_many")
     for _ in c1s:
         trace.record_he("HMult")
     a1 = _stack_polys([c.a for c in c1s])
@@ -650,6 +689,8 @@ def square_many(cts: list[Ciphertext], keys: KeySet) -> list[Ciphertext]:
     if not cts:
         return []
     _check_same_basis(cts, "square_many")
+    guards.check_level(cts[0].basis, 2, "square_many")
+    _check_cts(cts, "square_many")
     a = _stack_polys([c.a for c in cts])
     b = _stack_polys([c.b for c in cts])
     d0, d1, d2 = _tensor_products(a, b, a, b)
@@ -671,6 +712,8 @@ def rescale_many(cts: list[Ciphertext], params: CkksParams,
         return []
     times = params.rescale_primes if times is None else times
     _check_same_basis(cts, "rescale_many")
+    guards.check_level(cts[0].basis, times + 1, "rescale_many")
+    _check_cts(cts, "rescale_many")
     a = _stack_polys([c.a for c in cts])
     b = _stack_polys([c.b for c in cts])
     scales = [c.scale for c in cts]
@@ -689,6 +732,8 @@ def rescale_many(cts: list[Ciphertext], params: CkksParams,
 def rescale(ct: Ciphertext, params: CkksParams, times: int | None = None) -> Ciphertext:
     """Divide by the top ``times`` primes (paper default: 2 = double-prime RS)."""
     times = params.rescale_primes if times is None else times
+    guards.check_level(ct.basis, times + 1, "rescale")
+    guards.check_ciphertext(ct, "rescale")
     a, b, scale = ct.a, ct.b, ct.scale
     for _ in range(times):
         a, b, scale = _rescale_once(a, b, scale)

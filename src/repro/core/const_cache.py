@@ -69,6 +69,18 @@ def clear() -> None:
 
 _stage_events = 0
 
+# Optional pre-staging hook: called as hook(n) before a host→device constant
+# transfer is counted.  The fault-injection framework (repro.runtime.faults)
+# installs a callback here that may raise StagingFault, modeling a failed
+# upload of tables / evk material.  None (the default) is free.
+_stage_hook = None
+
+
+def set_stage_hook(fn) -> None:
+    """Install (or clear, with None) the pre-staging fault hook."""
+    global _stage_hook
+    _stage_hook = fn
+
 
 def stage_events() -> int:
     """Monotonic count of host→device constant staging transfers.
@@ -90,6 +102,8 @@ def record_stage(n: int = 1) -> None:
     metric every bench gate reads.
     """
     global _stage_events
+    if _stage_hook is not None:
+        _stage_hook(n)
     _stage_events += n
 
 
@@ -101,6 +115,8 @@ def stage_events_since(snapshot: int) -> int:
 def _stage(x):
     global _stage_events
     if isinstance(x, np.ndarray):
+        if _stage_hook is not None:
+            _stage_hook(1)
         _stage_events += 1
         return jnp.asarray(x)
     return x

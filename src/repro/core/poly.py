@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import const_cache
+from . import guards
 from . import modmath as mm
 from . import ntt as nttm
 from . import rns
@@ -71,11 +72,22 @@ class RnsPoly:
         return RnsPoly(nttm.intt(self.data, self.c()), self.basis, COEFF)
 
     # -- ring ops (domain-agnostic element-wise; mul requires NTT) -----------
+    def _check_aligned(self, o: "RnsPoly", op: str) -> None:
+        """Typed basis/domain mismatch (guards on) instead of a bare assert —
+        the serving layer quarantines GuardError, an AssertionError would
+        take the whole wave down as an engine bug."""
+        guards.check_basis_match(self.basis, o.basis, f"RnsPoly.{op}")
+        if guards.active() and self.domain != o.domain:
+            raise guards.BasisMismatch(
+                f"RnsPoly.{op}: domain mismatch {self.domain} vs {o.domain}")
+
     def __add__(self, o: "RnsPoly") -> "RnsPoly":
+        self._check_aligned(o, "add")
         assert self.basis == o.basis and self.domain == o.domain
         return RnsPoly(mm.addmod(self.data, o.data, self.c().q), self.basis, self.domain)
 
     def __sub__(self, o: "RnsPoly") -> "RnsPoly":
+        self._check_aligned(o, "sub")
         assert self.basis == o.basis and self.domain == o.domain
         return RnsPoly(mm.submod(self.data, o.data, self.c().q), self.basis, self.domain)
 
@@ -83,6 +95,7 @@ class RnsPoly:
         return RnsPoly(mm.negmod(self.data, self.c().q), self.basis, self.domain)
 
     def __mul__(self, o: "RnsPoly") -> "RnsPoly":
+        self._check_aligned(o, "mul")
         assert self.basis == o.basis
         assert self.domain == NTT and o.domain == NTT, "mul requires NTT domain"
         c = self.c()

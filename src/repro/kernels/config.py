@@ -102,10 +102,25 @@ def effective_block(B: int, requested: int | None, default: int = 4) -> int:
 
 _launches: collections.Counter = collections.Counter()
 
+# Optional pre-dispatch hook: called as hook(family, n) before the counter
+# moves.  The fault-injection framework (repro.runtime.faults) installs a
+# callback here that may raise TransientFault, modeling a chiplet fault at
+# the kernel-launch boundary — BEFORE any result is written, so a retry of
+# the op is always safe.  None (the default) costs one `is not None` test.
+_launch_hook = None
+
+
+def set_launch_hook(fn) -> None:
+    """Install (or clear, with None) the pre-dispatch launch hook."""
+    global _launch_hook
+    _launch_hook = fn
+
 
 def count_launch(family: str, n: int = 1) -> None:
     """Record ``n`` kernel dispatches of the given family ("ntt", "bconv",
     "eltwise", "automorphism", "auto_ks")."""
+    if _launch_hook is not None:
+        _launch_hook(family, n)
     _launches[family] += n
 
 

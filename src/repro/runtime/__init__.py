@@ -1,5 +1,12 @@
-"""Fault-tolerant step driver: checkpoint/restart, NaN quarantine, straggler
-watchdog, preemption-signal emergency save, elastic remesh hooks."""
+"""Fault-tolerant runtime: the training step driver (checkpoint/restart,
+NaN quarantine, straggler watchdog, preemption save) and the deterministic
+fault-injection framework the FHE serving chaos harness drives."""
 from .driver import DriverConfig, StepDriver
+from .faults import (FaultError, FaultInjector, FaultPlan, FaultSpec,
+                     StagingFault, TransientFault, active_injector, inject)
 
-__all__ = ["DriverConfig", "StepDriver"]
+__all__ = [
+    "DriverConfig", "FaultError", "FaultInjector", "FaultPlan", "FaultSpec",
+    "StagingFault", "StepDriver", "TransientFault", "active_injector",
+    "inject",
+]

@@ -1,0 +1,232 @@
+"""Deterministic fault injection for the FHE serving runtime.
+
+CiFHER's chiplet argument is a resilience argument: small known-good dies
+tolerate yield loss, and a package keeps working when individual components
+misbehave.  This module makes that failure model *executable* — seeded,
+scriptable fault plans that fire at the three places a real multi-chiplet
+accelerator faults:
+
+* **kernel-launch boundaries** — a transient chiplet fault aborts a dispatch
+  before it retires.  Hooked through
+  :func:`repro.kernels.config.set_launch_hook`, so the fault fires BEFORE the
+  per-family launch counter moves and before any result is scattered back —
+  a retry of the op is always safe.
+* **constant/evk staging uploads** — a failed host→package transfer.  Hooked
+  through :func:`repro.core.const_cache.set_stage_hook`, which both the
+  constant cache's own ``jnp.asarray`` staging and the serve keystore's
+  ``record_stage`` reporting pass through.
+* **limb-level bit-flip corruption** — silent data corruption in ciphertext
+  residues.  The injector flips bit 31 of one (limb, coefficient) cell:
+  every NTT prime is < 2³¹ (the lazy [0, 2q) arithmetic requires 2q < 2³²),
+  so the flip always drives the residue out of [0, q) — the class of
+  corruption the ``REPRO_GUARDS=full`` residue scan is guaranteed to catch.
+  In-range corruption needs redundancy (e.g. replicated evaluation) that is
+  out of scope here; see README §Robustness.
+
+Determinism: each :class:`FaultSpec` owns an independent
+``np.random.default_rng([seed, spec_index])`` stream and consumes exactly one
+draw per event it observes, so the same plan over the same workload fires at
+exactly the same events — replayable chaos, gated by ``BENCH_chaos.json``.
+
+Usage::
+
+    plan = FaultPlan([FaultSpec(site="launch", rate=0.01)], seed=7)
+    with faults.inject(plan) as inj:
+        engine.run_until_drained()
+    inj.fired["launch"]      # how many dispatches faulted
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+from repro.core import const_cache
+from repro.kernels import config as kconfig
+
+SITES = ("launch", "stage", "bitflip")
+
+
+class FaultError(Exception):
+    """Base class for injected *transient* faults — retryable by design."""
+
+
+class TransientFault(FaultError):
+    """A kernel dispatch aborted at the launch boundary (chiplet fault)."""
+
+
+class StagingFault(FaultError):
+    """A host→device constant/evk staging transfer failed."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One fault source in a plan.
+
+    ``site``      — "launch" (kernel dispatch), "stage" (constant/evk
+                    upload), or "bitflip" (ciphertext residue corruption;
+                    consulted by the serving engine per produced result).
+    ``rate``      — per-event firing probability (seeded, deterministic).
+    ``family``    — for "launch": restrict to one kernel family
+                    ("ntt", "bconv", "eltwise", "automorphism", "auto_ks");
+                    None hits every family.
+    ``at``        — scripted firings: 0-based event indices (per site) that
+                    fire regardless of ``rate`` — exact-replay scenarios.
+    ``max_fires`` — stop firing after this many hits (None = unbounded).
+    """
+    site: str
+    rate: float = 0.0
+    family: str | None = None
+    at: tuple[int, ...] = ()
+    max_fires: int | None = None
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(f"unknown fault site {self.site!r} — one of {SITES}")
+        if not (0.0 <= self.rate <= 1.0):
+            raise ValueError(f"fault rate {self.rate} outside [0, 1]")
+
+
+class FaultPlan:
+    """A seeded, scriptable set of fault specs.
+
+    ``from_dict`` accepts the JSON shape used by ``benchmarks/bench_chaos.py``
+    scenario tables: ``{"seed": 7, "specs": [{"site": "launch",
+    "rate": 0.01}, ...]}``.
+    """
+
+    def __init__(self, specs: list[FaultSpec] | tuple[FaultSpec, ...] = (),
+                 seed: int = 0):
+        self.specs = tuple(specs)
+        self.seed = int(seed)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FaultPlan":
+        return cls([FaultSpec(**s) for s in d.get("specs", ())],
+                   seed=d.get("seed", 0))
+
+    def to_dict(self) -> dict:
+        return {"seed": self.seed,
+                "specs": [dataclasses.asdict(s) for s in self.specs]}
+
+
+class FaultInjector:
+    """Evaluates a :class:`FaultPlan` against the runtime's fault sites.
+
+    One injector instance = one deterministic chaos run: per-spec rng
+    streams, per-site event counters (``events``), per-site fired counters
+    (``fired``), and the exact fired event log (``fired_log``) for
+    determinism checks.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self._rngs = [np.random.default_rng([plan.seed, i])
+                      for i in range(len(plan.specs))]
+        self._spec_fired = [0] * len(plan.specs)
+        self.events: collections.Counter = collections.Counter()
+        self.fired: collections.Counter = collections.Counter()
+        self.fired_log: list[tuple[str, int]] = []   # (site, event index)
+
+    # -- core decision ---------------------------------------------------------
+
+    def _consult(self, site: str, family: str | None = None) -> bool:
+        """One event at ``site``; True if any matching spec fires."""
+        idx = self.events[site]
+        self.events[site] += 1
+        hit = False
+        for i, spec in enumerate(self.plan.specs):
+            if spec.site != site:
+                continue
+            if site == "launch" and spec.family is not None \
+                    and spec.family != family:
+                continue
+            if spec.max_fires is not None \
+                    and self._spec_fired[i] >= spec.max_fires:
+                continue
+            # consume exactly one draw per observed event so the stream is
+            # reproducible regardless of which specs fire
+            draw = self._rngs[i].random() if spec.rate > 0.0 else 1.0
+            if idx in spec.at or draw < spec.rate:
+                self._spec_fired[i] += 1
+                hit = True
+        if hit:
+            self.fired[site] += 1
+            self.fired_log.append((site, idx))
+        return hit
+
+    # -- site hooks ------------------------------------------------------------
+
+    def on_launch(self, family: str, n: int) -> None:
+        if self._consult("launch", family):
+            raise TransientFault(
+                f"injected transient fault at {family} launch "
+                f"(event {self.events['launch'] - 1})")
+
+    def on_stage(self, n: int) -> None:
+        if self._consult("stage"):
+            raise StagingFault(
+                f"injected staging fault (event {self.events['stage'] - 1})")
+
+    def maybe_corrupt(self, ct):
+        """Consult the "bitflip" site for one produced ciphertext.
+
+        Returns a corrupted copy (bit 31 set on one residue of ``a``) when
+        the site fires, else None.  Position selection draws from the plan
+        seed, so corruption locations replay exactly.
+        """
+        if not self._consult("bitflip"):
+            return None
+        from repro.core import poly as pl
+        from repro.core.keys import Ciphertext
+        rng = np.random.default_rng([self.plan.seed, 0xB17,
+                                     self.fired["bitflip"]])
+        data = np.array(ct.a.data)                    # host copy
+        flat = data.reshape(-1)
+        pos = int(rng.integers(0, flat.size))
+        flat[pos] |= np.uint32(0x8000_0000)           # residue ≥ 2³¹ > q
+        import jax.numpy as jnp
+        a = pl.RnsPoly(jnp.asarray(data), ct.a.basis, ct.a.domain)
+        return Ciphertext(a, ct.b, ct.scale)
+
+
+# ----------------------------------------------------------------------------
+# Activation (module-level, context-managed)
+# ----------------------------------------------------------------------------
+
+_active: FaultInjector | None = None
+
+
+def active_injector() -> FaultInjector | None:
+    """The currently-installed injector (None outside an ``inject`` region)."""
+    return _active
+
+
+class inject:
+    """Context manager installing a fault plan into the runtime's hooks.
+
+    Kernel-launch and staging faults fire from inside the hooked counters;
+    bit-flip corruption is consulted by the serving engine per produced
+    result through :func:`active_injector`.  Nesting is rejected — one chaos
+    run at a time keeps the determinism story simple.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.injector = FaultInjector(plan)
+
+    def __enter__(self) -> FaultInjector:
+        global _active
+        if _active is not None:
+            raise RuntimeError("a fault-injection region is already active")
+        _active = self.injector
+        kconfig.set_launch_hook(self.injector.on_launch)
+        const_cache.set_stage_hook(self.injector.on_stage)
+        return self.injector
+
+    def __exit__(self, *exc):
+        global _active
+        _active = None
+        kconfig.set_launch_hook(None)
+        const_cache.set_stage_hook(None)
+        return False

@@ -14,16 +14,23 @@ substrate remains importable from its historical location.
 """
 from .engine import ServeEngine
 from .fhe import FheServeEngine
-from .ir import (BATCHED_KINDS, OP_KINDS, FheRequest, HeOp,
-                 standard_program, standard_reference, standard_request)
-from .keystore import TenantKeyStore, UnknownTenant
+from .ir import (BATCHED_KINDS, KEYED_KINDS, OP_KINDS, FheRequest, HeOp,
+                 RequestFailed, RequestRejected, RequestTimeout,
+                 admission_check, standard_program, standard_reference,
+                 standard_request)
+from .keystore import TenantDegraded, TenantKeyStore, UnknownTenant
 from .metrics import ServeMetrics
 from .plans import Plan, PlanCache
+from .resilience import (DEGRADED, HEALTHY, SHEDDING, OverloadController,
+                         RetryPolicy)
 from .scheduler import AdmissionQueue, QueueFull
 
 __all__ = [
-    "AdmissionQueue", "BATCHED_KINDS", "FheRequest", "FheServeEngine",
-    "HeOp", "OP_KINDS", "Plan", "PlanCache", "QueueFull", "ServeEngine",
-    "ServeMetrics", "TenantKeyStore", "UnknownTenant", "standard_program",
+    "AdmissionQueue", "BATCHED_KINDS", "DEGRADED", "FheRequest",
+    "FheServeEngine", "HEALTHY", "HeOp", "KEYED_KINDS", "OP_KINDS",
+    "OverloadController", "Plan", "PlanCache", "QueueFull", "RequestFailed",
+    "RequestRejected", "RequestTimeout", "RetryPolicy", "SHEDDING",
+    "ServeEngine", "ServeMetrics", "TenantDegraded", "TenantKeyStore",
+    "UnknownTenant", "admission_check", "standard_program",
     "standard_reference", "standard_request",
 ]

@@ -17,20 +17,23 @@ share a stacked dispatch because the math is component-wise and key-free.
 Executors are resolved through the :class:`~repro.serve.plans.PlanCache`
 keyed on (kind, basis, batch size, params, tenant) — steady-state serving of
 a fixed workload re-resolves nothing.
+
+**Transactional scatter invariant**: every executor computes ALL results
+before writing ANY back into request register files.  A fault or guard trip
+mid-compute therefore leaves every request's ``env`` exactly as it was —
+the engine's retry/replay machinery (``repro.serve.fhe``) depends on this
+to re-dispatch a faulted group (or its split singletons) safely even for
+ops whose destination register aliases a source.
 """
 from __future__ import annotations
 
 from repro.core import ckks
 
-from .ir import BATCHED_KINDS, FheRequest, HeOp
+from .ir import BATCHED_KINDS, KEYED_KINDS as _KEYED_KINDS, FheRequest, HeOp
 from .keystore import TenantKeyStore
 from .plans import PlanCache
 
 Item = tuple[FheRequest, HeOp]
-
-# kinds whose dispatch consumes the tenant's evaluation keys — these group
-# (and plan) per tenant; everything else batches across tenants
-_KEYED_KINDS = frozenset({"hmult", "square", "hrot", "conjugate"})
 
 
 class Batcher:
@@ -148,17 +151,18 @@ class Batcher:
     # -- unbatched fallbacks (singleton groups) --------------------------------
 
     def _exec_conjugate(self, items: list[Item]) -> None:
-        for req, op in items:
-            keys = self.keystore.acquire(req.tenant)
-            req.env[op.dst] = ckks.conjugate(req.env[op.srcs[0]], keys)
+        outs = [ckks.conjugate(req.env[op.srcs[0]],
+                               self.keystore.acquire(req.tenant))
+                for req, op in items]
+        self._scatter(items, outs)
 
     def _exec_mul_const(self, items: list[Item]) -> None:
-        for req, op in items:
-            params = self.keystore.keyset(req.tenant).params
-            req.env[op.dst] = ckks.mul_const(req.env[op.srcs[0]],
-                                             float(op.arg), params)
+        outs = [ckks.mul_const(req.env[op.srcs[0]], float(op.arg),
+                               self.keystore.keyset(req.tenant).params)
+                for req, op in items]
+        self._scatter(items, outs)
 
     def _exec_add_const(self, items: list[Item]) -> None:
-        for req, op in items:
-            req.env[op.dst] = ckks.add_const(req.env[op.srcs[0]],
-                                             float(op.arg))
+        outs = [ckks.add_const(req.env[op.srcs[0]], float(op.arg))
+                for req, op in items]
+        self._scatter(items, outs)

@@ -6,7 +6,7 @@ throughput above the kernel layer):
 * :class:`~repro.serve.scheduler.AdmissionQueue` — deadline/priority
   admission with bounded capacity;
 * :class:`~repro.serve.keystore.TenantKeyStore` — per-tenant evk residency
-  (LRU, per-step upload budget);
+  (LRU, per-step upload budget, staging-fault degradation);
 * :class:`~repro.serve.batcher.Batcher` — same-shaped ops from DIFFERENT
   requests stacked into one kernel dispatch;
 * :class:`~repro.serve.plans.PlanCache` — per-(op, level, batch, tenant)
@@ -24,23 +24,56 @@ perfectly; heterogeneous traffic batches opportunistically per op family.
 identical per-op arithmetic, but every op dispatches alone — the comparand
 for the ≥3× throughput gate and the bit-exactness check in
 ``benchmarks/bench_serve.py``.
+
+**Fault tolerance** (see ``benchmarks/bench_chaos.py`` for the measured
+guarantees):
+
+* transient faults (:class:`~repro.runtime.faults.FaultError`) retry with
+  bounded exponential backoff (:class:`~repro.serve.resilience.RetryPolicy`);
+  safe because the batcher's scatter is transactional — a faulted dispatch
+  never half-writes a register file;
+* deterministic invariant trips (:class:`~repro.core.guards.GuardError`)
+  are never retried: the group splits to singletons, the poisoned request
+  is quarantined with a typed failure, and the rest of the wave replays
+  bit-exactly;
+* deadlines are enforced at pop time (already-expired work is dropped
+  before it costs a dispatch) and at step boundaries for active requests;
+* sustained fault pressure degrades gracefully via
+  :class:`~repro.serve.resilience.OverloadController`: batch sizes shrink
+  (smaller blast radius, cheaper replays) and, under severe pressure, the
+  lowest-priority queued work is shed with a typed status instead of
+  letting the queue rot.  Health is surfaced through ``ServeMetrics``.
+
+A request never returns a wrong answer: it either completes with verified
+state transitions or reaches a typed terminal status
+(``rejected|timeout|failed|shed``) whose :meth:`~repro.serve.ir.FheRequest.
+result` raises.
 """
 from __future__ import annotations
 
 import time
 
+import numpy as np
+
+from repro.core import guards
+from repro.runtime import faults
+from repro.runtime.faults import FaultError
+
 from .batcher import Batcher
-from .ir import FheRequest
-from .keystore import TenantKeyStore
+from .ir import KEYED_KINDS, FheRequest, admission_check
+from .keystore import TenantDegraded, TenantKeyStore
 from .metrics import ServeMetrics
 from .plans import PlanCache
+from .resilience import OverloadController, RetryPolicy
 from .scheduler import AdmissionQueue, QueueFull
 
 
 class FheServeEngine:
     def __init__(self, keystore: TenantKeyStore, max_batch: int = 16,
                  batching: bool = True, queue_capacity: int = 1024,
-                 clock=None):
+                 clock=None, retry: RetryPolicy | None = None,
+                 overload: OverloadController | None = None,
+                 enforce_deadlines: bool = True, sleeper=None):
         self.keystore = keystore
         self.max_batch = max_batch
         self.queue = AdmissionQueue(capacity=queue_capacity)
@@ -48,53 +81,125 @@ class FheServeEngine:
         self.metrics = ServeMetrics()
         self.batcher = Batcher(keystore, self.plans, batching=batching)
         self.active: list[FheRequest] = []
-        self.completed: list[FheRequest] = []
+        self.completed: list[FheRequest] = []   # status "ok" only
+        self.failed: list[FheRequest] = []      # typed terminal failures
+        self.enforce_deadlines = enforce_deadlines
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.overload = overload if overload is not None \
+            else OverloadController()
+        self._retry_rng = np.random.default_rng(self.retry.seed)
+        self._sleep = sleeper if sleeper is not None else time.sleep
         self._clock = clock if clock is not None else time.monotonic
 
     # -- submission -----------------------------------------------------------
 
     def submit(self, req: FheRequest) -> bool:
-        """Admit a request; False = rejected (queue full / unknown tenant /
-        unsupported rotation)."""
+        """Admit a request; False = rejected with a typed reason recorded on
+        the request (``status="rejected"``, ``error=<reason>``) and in
+        ``metrics.rejected_reasons``."""
         try:
-            self.keystore.keyset(req.tenant)
+            ks = self.keystore.keyset(req.tenant)
         except KeyError:
-            self.metrics.rejected += 1
-            return False
-        for op in req.program:
-            if op.kind == "hrot" and not (
-                    isinstance(op.arg, int)
-                    and self.keystore.supports_rotation(req.tenant, op.arg)):
-                self.metrics.rejected += 1
-                return False
-            if op.kind == "conjugate" and not self.keystore.supports_conjugate(
-                    req.tenant):
-                self.metrics.rejected += 1
-                return False
-            if op.kind == "pmult" and op.arg not in req.plaintexts:
-                self.metrics.rejected += 1
-                return False
+            return self._reject(req, "unknown_tenant")
+        if self.keystore.is_degraded(req.tenant) and any(
+                op.kind in KEYED_KINDS for op in req.program):
+            # degraded = this tenant's evks failed to stage; only its
+            # KEY-consuming programs are refused — key-free arithmetic
+            # still serves, and other tenants are never affected
+            return self._reject(req, "tenant_degraded")
+        reason = admission_check(
+            req, ks,
+            lambda r: self.keystore.supports_rotation(req.tenant, r),
+            lambda: self.keystore.supports_conjugate(req.tenant))
+        if reason is not None:
+            return self._reject(req, reason)
         try:
             self.queue.push(req)
         except QueueFull:
-            self.metrics.rejected += 1
-            return False
+            return self._reject(req, "queue_full")
         req.admitted_at = self._clock()
         self.metrics.admitted += 1
         return True
 
+    def _reject(self, req: FheRequest, reason: str) -> bool:
+        req.done = True
+        req.status = "rejected"
+        req.error = reason
+        self.metrics.reject(reason)
+        return False
+
+    # -- terminal transitions -------------------------------------------------
+
+    def _finish(self, req: FheRequest, now: float) -> None:
+        req.done = True
+        req.status = "ok"
+        req.finished_at = now
+        self.metrics.served += 1
+        self.metrics.serve_time += now - req.admitted_at
+        if req.finished_at > req.deadline:
+            self.metrics.missed_deadlines += 1
+        self.completed.append(req)
+
+    def _fail(self, req: FheRequest, status: str, reason: str,
+              now: float) -> None:
+        req.done = True
+        req.status = status
+        req.error = reason
+        req.finished_at = now
+        if status == "timeout":
+            self.metrics.timed_out += 1
+        elif status == "shed":
+            self.metrics.shed += 1
+        else:
+            self.metrics.failed += 1
+        self.failed.append(req)
+
     # -- engine loop ----------------------------------------------------------
 
-    def _fill_slots(self) -> None:
+    def _expire_active(self, now: float) -> None:
+        """Deadline enforcement at the step boundary: expired active work is
+        cut before it costs another dispatch."""
+        still = []
+        for req in self.active:
+            if req.deadline < now:
+                self.metrics.missed_deadlines += 1
+                self._fail(req, "timeout", "expired_mid_execution", now)
+            else:
+                still.append(req)
+        self.active = still
+
+    def _shed(self, now: float) -> None:
+        k = self.overload.shed_count(len(self.queue), self.max_batch)
+        if k:
+            for req in self.queue.shed_lowest(k):
+                self._fail(req, "shed", "load_shed", now)
+
+    def _fill_slots(self, now: float) -> None:
         deferred = []
-        while self.queue and len(self.active) + len(deferred) < self.max_batch:
-            if not self.keystore.can_admit(self.queue.peek().tenant):
+        cap = self.overload.effective_batch(self.max_batch)
+        while self.queue and len(self.active) + len(deferred) < cap:
+            head = self.queue.peek()
+            if self.enforce_deadlines and head.deadline < now:
+                # already expired: drop at pop, never spend a dispatch on it
+                req = self.queue.pop()
+                self.metrics.deadline_missed_at_pop += 1
+                self.metrics.missed_deadlines += 1
+                self._fail(req, "timeout", "expired_before_start", now)
+                continue
+            if not self.keystore.can_admit(head.tenant):
                 # step upload budget spent: leave cold-tenant work queued
                 # unless nothing is active at all (liveness beats budget)
                 if self.active or deferred:
                     break
             req = self.queue.pop()
-            self.keystore.acquire(req.tenant)
+            try:
+                if not self.keystore.is_degraded(req.tenant) or any(
+                        op.kind in KEYED_KINDS for op in req.program):
+                    self.keystore.acquire(req.tenant)
+            except TenantDegraded:
+                self._fail(req, "failed", "tenant_degraded", self._clock())
+                continue
+            req.status = "active"
             req.started_at = self._clock()
             req.env = dict(req.inputs)
             req.pc = 0
@@ -105,43 +210,126 @@ class FheServeEngine:
             deferred.append(req)
         self.active.extend(deferred)
 
-    def _finish(self, req: FheRequest, now: float) -> None:
-        req.done = True
-        req.finished_at = now
-        self.metrics.served += 1
-        self.metrics.serve_time += now - req.admitted_at
-        if req.finished_at > req.deadline:
-            self.metrics.missed_deadlines += 1
-        self.completed.append(req)
+    def _execute_group(self, group, depth: int = 0) -> list:
+        """Dispatch one group with the resilience policy applied.
+
+        Transient :class:`FaultError`\\ s retry with backoff (the batcher's
+        transactional scatter makes redispatch safe).  Deterministic
+        :class:`GuardError`\\ s are never retried — a group of ≥2 splits into
+        singleton replays to isolate the poisoned request; the singleton
+        culprit is quarantined.  Returns ``[(req, status, reason), ...]``
+        for every request that could not be served.
+        """
+        attempt = 0
+        while True:
+            try:
+                self.batcher.execute(group)
+                self.metrics.groups_dispatched += 1
+                self.metrics.ops_executed += len(group)
+                if len(group) >= 2:
+                    self.metrics.ops_batched += len(group)
+                return []
+            except FaultError as e:
+                self.metrics.transient_faults += 1
+                self.overload.record_fault()
+                if attempt >= self.retry.max_retries:
+                    return self._split_or_quarantine(
+                        group, depth, "transient_fault", e)
+                delay = self.retry.backoff(attempt, self._retry_rng)
+                self.metrics.backoff_time += delay
+                self._sleep(delay)
+                self.metrics.retries += 1
+                for req, _ in group:
+                    req.attempts += 1
+                attempt += 1
+            except guards.GuardError as e:
+                return self._split_or_quarantine(group, depth, "poisoned", e)
+            except TenantDegraded:
+                # keyed groups are single-tenant: the whole group fails fast
+                return [(req, "failed", "tenant_degraded") for req, _ in group]
+
+    def _split_or_quarantine(self, group, depth: int, reason: str, exc) -> list:
+        if len(group) == 1:
+            req, _ = group[0]
+            if reason == "poisoned":
+                self.metrics.quarantined += 1
+            return [(req, "failed", f"{reason}: {exc}")]
+        # evict the culprit by replaying each request alone; the batched and
+        # singleton paths are bit-exact, so survivors lose nothing
+        self.metrics.group_splits += 1
+        failures = []
+        for item in group:
+            failures.extend(self._execute_group([item], depth + 1))
+        return failures
+
+    def _inject_and_check_outputs(self, group) -> list:
+        """Post-dispatch: apply any scripted bit-flip corruption, then (full
+        guard mode) scan result residues so corruption is quarantined at the
+        step it happened instead of surfacing as a wrong decrypt."""
+        inj = faults.active_injector()
+        failures = []
+        for req, op in group:
+            if inj is not None:
+                bad = inj.maybe_corrupt(req.env[op.dst])
+                if bad is not None:
+                    req.env[op.dst] = bad
+            if guards.full():
+                try:
+                    guards.check_ciphertext(req.env[op.dst],
+                                            f"post:{op.kind}")
+                except guards.GuardError as e:
+                    self.metrics.quarantined += 1
+                    failures.append((req, "failed", f"poisoned: {e}"))
+        return failures
 
     def step(self) -> int:
-        """One serving iteration; returns the number of ops executed."""
+        """One serving iteration; returns the number of ops attempted."""
         self.keystore.begin_step()
-        self._fill_slots()
+        now = self._clock()
+        if self.enforce_deadlines:
+            self._expire_active(now)
+        self._shed(now)
+        self._fill_slots(now)
         if not self.active:
+            self.overload.end_step()
+            self._update_health()
             return 0
         self.metrics.steps += 1
         ready = [(r, r.next_op) for r in self.active]
-        groups = self.batcher.form_groups(ready)
-        for group in groups:
-            self.batcher.execute(group)
-            self.metrics.groups_dispatched += 1
-            self.metrics.ops_executed += len(group)
-            if len(group) >= 2:
-                self.metrics.ops_batched += len(group)
+        failures = []
+        for group in self.batcher.form_groups(ready):
+            fs = self._execute_group(group)
+            failures.extend(fs)
+            dead = {req.rid for req, _, _ in fs}
+            survivors = [it for it in group if it[0].rid not in dead]
+            if survivors:
+                failures.extend(self._inject_and_check_outputs(survivors))
+        failed_by_rid = {req.rid: (status, reason)
+                         for req, status, reason in failures}
         still = []
         now = self._clock()
         for req in self.active:
+            if req.rid in failed_by_rid:
+                status, reason = failed_by_rid[req.rid]
+                self._fail(req, status, reason, now)
+                continue
             req.pc += 1
             if req.pc >= len(req.program):
                 self._finish(req, now)
             else:
                 still.append(req)
         self.active = still
+        self.overload.end_step()
+        self._update_health()
         return len(ready)
 
+    def _update_health(self) -> None:
+        self.metrics.health = self.overload.state()
+        self.metrics.fault_pressure = self.overload.pressure
+
     def run_until_drained(self, max_steps: int = 100_000) -> list[FheRequest]:
-        """Serve until queue and active set are empty; returns completions."""
+        """Serve until queue and active set are empty; returns completions
+        (successes only — typed failures accumulate in ``self.failed``)."""
         for _ in range(max_steps):
             if not self.step() and not self.queue:
                 break

@@ -27,6 +27,39 @@ BATCHED_KINDS = frozenset(
 OP_KINDS = BATCHED_KINDS | frozenset(
     {"conjugate", "mul_const", "add_const"})
 
+# ciphertext-source arity per kind (immediates ride ``arg``)
+OP_ARITY = {
+    "hadd": 2, "hsub": 2, "hmult": 2,
+    "pmult": 1, "square": 1, "rescale": 1, "hrot": 1, "conjugate": 1,
+    "mul_const": 1, "add_const": 1,
+}
+
+# kinds whose dispatch consumes the tenant's evaluation keys (relin/galois);
+# the batcher groups these per tenant and a degraded tenant's key-consuming
+# programs are rejected at admission
+KEYED_KINDS = frozenset({"hmult", "square", "hrot", "conjugate"})
+
+
+class RequestFailed(Exception):
+    """Terminal typed failure of a request: ``reason`` is a stable string
+    (``"transient_fault"``, ``"poisoned"``, ``"tenant_degraded"``, …)."""
+
+    def __init__(self, reason: str, detail: str = ""):
+        self.reason = reason
+        super().__init__(f"{reason}: {detail}" if detail else reason)
+
+
+class RequestTimeout(RequestFailed):
+    """Deadline expired before (or during) execution."""
+
+    def __init__(self, detail: str = ""):
+        super().__init__("timeout", detail)
+
+
+class RequestRejected(RequestFailed):
+    """Admission-time validation rejected the request (malformed program,
+    unknown tenant, unsupported rotation, queue full, …)."""
+
 
 @dataclasses.dataclass(frozen=True)
 class HeOp:
@@ -45,6 +78,10 @@ class HeOp:
     def __post_init__(self):
         if self.kind not in OP_KINDS:
             raise ValueError(f"unknown HE op kind {self.kind!r}")
+        if len(self.srcs) != OP_ARITY[self.kind]:
+            raise ValueError(
+                f"{self.kind} takes {OP_ARITY[self.kind]} source "
+                f"register(s), got {len(self.srcs)}")
 
 
 _rid_counter = itertools.count()
@@ -66,6 +103,9 @@ class FheRequest:
     pc: int = 0
     env: dict = dataclasses.field(default_factory=dict)
     done: bool = False
+    status: str = "queued"    # queued|active|ok|rejected|timeout|failed|shed
+    error: str | None = None  # terminal reason for non-"ok" states
+    attempts: int = 0         # transient-fault retries this request absorbed
     admitted_at: float = math.nan
     started_at: float = math.nan
     finished_at: float = math.nan
@@ -90,8 +130,88 @@ class FheRequest:
         return self.program[self.pc] if self.pc < len(self.program) else None
 
     def result(self) -> dict[str, Ciphertext]:
+        """The requested output ciphertexts, or a typed terminal error.
+
+        A request that reached a non-"ok" terminal state raises
+        :class:`RequestTimeout` / :class:`RequestFailed` — callers never see
+        half-computed registers from a faulted or expired request.
+        """
         assert self.done, "request not finished"
+        if self.status == "timeout":
+            raise RequestTimeout(f"request {self.rid}: {self.error}")
+        if self.status != "ok":
+            raise RequestFailed(self.status if self.error is None
+                                else self.error,
+                                f"request {self.rid}")
         return {name: self.env[name] for name in self.outputs}
+
+
+def admission_check(req: "FheRequest", keyset, supports_rotation,
+                    supports_conjugate) -> str | None:
+    """Static validation of a request's program at admission time.
+
+    Walks the straight-line program with an abstract (basis, scale) state
+    per register — the same invariants the ``REPRO_GUARDS`` layer enforces
+    at execution time — so malformed programs (level/basis mismatches,
+    rescale past the basis floor, drifted-scale adds, missing plaintexts or
+    rotation keys) are rejected with a typed reason string up front instead
+    of detonating mid-wave and costing a stacked launch.
+
+    Returns None when valid, else a stable ``"op<i>:<kind>:<why>"`` reason.
+    """
+    from repro.core import guards
+    params = keyset.params
+    basis = {name: ct.basis for name, ct in req.inputs.items()}
+    scale = {name: float(ct.scale) for name, ct in req.inputs.items()}
+    for i, op in enumerate(req.program):
+        where = f"op{i}:{op.kind}"
+        bs = [basis[s] for s in op.srcs]
+        sc = [scale[s] for s in op.srcs]
+        if len(bs) == 2 and bs[0] != bs[1]:
+            return f"{where}:level_mismatch"
+        if op.kind in ("hadd", "hsub") and abs(sc[0] - sc[1]) > \
+                guards.SCALE_RTOL * max(abs(sc[0]), 1e-300):
+            return f"{where}:scale_drift"
+        if op.kind in ("hmult", "square") and len(bs[0]) < 2:
+            return f"{where}:level_underflow"
+        if op.kind in ("rescale", "mul_const"):
+            times = (op.arg if op.kind == "rescale" and op.arg is not None
+                     else params.rescale_primes if op.kind == "rescale" else 1)
+            if len(bs[0]) < times + 1:
+                return f"{where}:level_underflow"
+        if op.kind == "hrot":
+            if not isinstance(op.arg, int):
+                return f"{where}:bad_rotation_arg"
+            if not supports_rotation(op.arg):
+                return f"{where}:unsupported_rotation"
+        if op.kind == "conjugate" and not supports_conjugate():
+            return f"{where}:unsupported_conjugate"
+        if op.kind == "pmult":
+            if op.arg not in req.plaintexts:
+                return f"{where}:missing_plaintext"
+            pt, _ = req.plaintexts[op.arg]
+            if tuple(pt.basis) != bs[0]:
+                return f"{where}:plaintext_basis_mismatch"
+        # abstract transfer: result basis/scale per kind
+        if op.kind == "rescale":
+            times = op.arg if op.arg is not None else params.rescale_primes
+            out_b, out_s = bs[0], sc[0]
+            for _ in range(times):
+                out_s /= out_b[-1]
+                out_b = out_b[:-1]
+        elif op.kind == "mul_const":
+            out_b, out_s = bs[0][:-1], sc[0]      # drift-free internal rescale
+        elif op.kind == "hmult":
+            out_b, out_s = bs[0], sc[0] * sc[1]
+        elif op.kind == "square":
+            out_b, out_s = bs[0], sc[0] * sc[0]
+        elif op.kind == "pmult":
+            out_b, out_s = bs[0], sc[0] * float(req.plaintexts[op.arg][1])
+        else:                                      # hadd/hsub/hrot/conj/add_c
+            out_b, out_s = bs[0], sc[0]
+        basis[op.dst] = out_b
+        scale[op.dst] = out_s
+    return None
 
 
 def standard_program() -> tuple[HeOp, ...]:

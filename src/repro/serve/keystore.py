@@ -21,10 +21,19 @@ import collections
 from repro.core import const_cache
 from repro.core import poly as pl
 from repro.core.keys import KeySet
+from repro.runtime.faults import FaultError
 
 
 class UnknownTenant(KeyError):
     pass
+
+
+class TenantDegraded(KeyError):
+    """The tenant's evaluation keys could not be staged (upload faulted and
+    the one bounded retry faulted too).  Key-consuming requests from this
+    tenant are rejected until :meth:`TenantKeyStore.heal` — other tenants
+    are unaffected, and no resident tenant was evicted for the failed
+    upload."""
 
 
 class TenantKeyStore:
@@ -39,6 +48,9 @@ class TenantKeyStore:
         self.uploads = 0                       # total staging transfers
         self.evictions = 0
         self._step_uploads = 0
+        self.degraded: set[str] = set()        # tenants with failed staging
+        self.staging_retries = 0               # upload faults absorbed
+        self.degrade_events = 0                # tenants marked degraded
 
     # -- registration ---------------------------------------------------------
 
@@ -80,19 +92,53 @@ class TenantKeyStore:
         and counts the transfers; steady-state acquisitions are free.
         """
         ks = self.keyset(tenant)
+        if tenant in self.degraded:
+            raise TenantDegraded(tenant)
         if tenant in self._resident:
             self._resident.move_to_end(tenant)
             return ks
-        n = self._stage(ks)
+        n = self._stage_with_retry(tenant, ks)
+        # residency / budgets / eviction mutate ONLY after staging succeeded:
+        # a failed upload must never evict a healthy resident tenant.
         self.uploads += n
         self._step_uploads += n
-        const_cache.record_stage(n)
         self._resident[tenant] = n
         while len(self._resident) > self.max_resident:
             victim, _ = self._resident.popitem(last=False)
             self._registered[victim].drop_device_caches()
             self.evictions += 1
         return ks
+
+    def _stage_with_retry(self, tenant: str, ks: KeySet) -> int:
+        """One staging attempt plus one bounded retry on a transient fault.
+
+        A first fault drops the half-staged device forms and retries from a
+        clean slate; a second marks the tenant degraded (non-fatal to the
+        engine — the serving layer rejects only this tenant's key-consuming
+        work until :meth:`heal`)."""
+        try:
+            n = self._stage(ks)
+            const_cache.record_stage(n)
+            return n
+        except FaultError:
+            self.staging_retries += 1
+            ks.drop_device_caches()
+            try:
+                n = self._stage(ks)
+                const_cache.record_stage(n)
+                return n
+            except FaultError as e:
+                ks.drop_device_caches()
+                self.degraded.add(tenant)
+                self.degrade_events += 1
+                raise TenantDegraded(tenant) from e
+
+    def is_degraded(self, tenant: str) -> bool:
+        return tenant in self.degraded
+
+    def heal(self, tenant: str) -> None:
+        """Clear the degraded mark; the next acquire re-attempts staging."""
+        self.degraded.discard(tenant)
 
     def _stage(self, ks: KeySet) -> int:
         """Warm the device-resident evk forms used by the serving hot path:

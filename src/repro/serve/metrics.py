@@ -28,6 +28,25 @@ class ServeMetrics:
     wait_time: float = 0.0               # admission → first execution
     serve_time: float = 0.0              # admission → completion
 
+    # -- resilience (see repro.serve.resilience / repro.runtime.faults) ------
+    failed: int = 0                      # terminal non-timeout failures
+    timed_out: int = 0                   # deadline expired during execution
+    deadline_missed_at_pop: int = 0      # dropped already-expired at pop
+    shed: int = 0                        # dropped by overload shedding
+    transient_faults: int = 0            # faults observed (pre-retry)
+    retries: int = 0                     # re-dispatches after backoff
+    quarantined: int = 0                 # poisoned requests evicted from waves
+    group_splits: int = 0                # faulted groups replayed as singletons
+    backoff_time: float = 0.0            # total seconds slept in backoff
+    health: str = "healthy"              # overload controller state
+    fault_pressure: float = 0.0          # overload controller EMA
+    rejected_reasons: dict = dataclasses.field(default_factory=dict)
+
+    def reject(self, reason: str) -> None:
+        self.rejected += 1
+        key = reason.split(":")[-1] if ":" in reason else reason
+        self.rejected_reasons[key] = self.rejected_reasons.get(key, 0) + 1
+
     _launch_snap: dict = dataclasses.field(default_factory=dict, repr=False)
     _stage_snap: int = 0
 
@@ -56,6 +75,18 @@ class ServeMetrics:
             "ops_batched": self.ops_batched,
             "mean_wait": self.wait_time / max(1, self.served),
             "mean_serve_time": self.serve_time / max(1, self.served),
+            "failed": self.failed,
+            "timed_out": self.timed_out,
+            "deadline_missed_at_pop": self.deadline_missed_at_pop,
+            "shed": self.shed,
+            "transient_faults": self.transient_faults,
+            "retries": self.retries,
+            "quarantined": self.quarantined,
+            "group_splits": self.group_splits,
+            "backoff_time": self.backoff_time,
+            "health": self.health,
+            "fault_pressure": self.fault_pressure,
+            "rejected_reasons": dict(self.rejected_reasons),
         }
         if plan_stats is not None:
             out["plan_cache"] = plan_stats

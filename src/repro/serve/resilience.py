@@ -1,0 +1,109 @@
+"""Resilience policy for the FHE serving engine: retry/backoff + overload
+control.
+
+Two concerns live here, both deterministic and unit-testable in isolation:
+
+* :class:`RetryPolicy` — bounded exponential backoff with seeded jitter for
+  *transient* faults (kernel-launch aborts, staging failures injected or
+  real).  Deterministic guard violations are never retried — a corrupted
+  operand stays corrupted; those go to poison-request quarantine instead
+  (see ``repro.serve.fhe``).
+* :class:`OverloadController` — graceful degradation under sustained fault
+  pressure.  An EMA of faults-per-step drives a three-state health machine:
+
+      healthy  → full batch size
+      degraded → batch size halves (smaller blast radius per wave, cheaper
+                 replays when a wave does fault)
+      shedding → batch size quarters AND the engine drops the
+                 lowest-priority queued work beyond a bounded backlog
+
+  surfaced through ``ServeMetrics`` as the engine's health state so
+  operators see load shedding rather than silent queue growth.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+HEALTHY = "healthy"
+DEGRADED = "degraded"
+SHEDDING = "shedding"
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retries with exponential backoff + seeded jitter.
+
+    Attempt *k* (0-based) sleeps ``min(max_delay, base_delay·2^k)`` scaled by
+    a uniform jitter in ``[1-jitter, 1+jitter]`` — the standard thundering-
+    herd spreader.  ``max_retries=0`` disables retries entirely (the chaos
+    bench's unprotected baseline).
+    """
+    max_retries: int = 3
+    base_delay: float = 0.001
+    max_delay: float = 0.050
+    jitter: float = 0.25
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.max_retries >= 0 and self.base_delay >= 0.0
+        assert 0.0 <= self.jitter < 1.0
+
+    def backoff(self, attempt: int, rng: np.random.Generator) -> float:
+        """Delay before retry ``attempt`` (0-based)."""
+        d = min(self.max_delay, self.base_delay * (2.0 ** attempt))
+        return d * (1.0 + self.jitter * float(rng.uniform(-1.0, 1.0)))
+
+    def bounds(self, attempt: int) -> tuple[float, float]:
+        """[lo, hi] envelope of :meth:`backoff` for bound assertions."""
+        d = min(self.max_delay, self.base_delay * (2.0 ** attempt))
+        return d * (1.0 - self.jitter), d * (1.0 + self.jitter)
+
+
+@dataclasses.dataclass
+class OverloadController:
+    """Fault-pressure EMA → health state → effective batch / shed decisions.
+
+    ``record_fault`` is called per observed transient fault; ``end_step``
+    folds the step's count into the EMA and decays it.  Hysteresis comes
+    from the EMA itself: pressure must *stay* low for a few steps before the
+    state recovers.
+    """
+    degrade_threshold: float = 0.5   # EMA faults/step to leave HEALTHY
+    shed_threshold: float = 2.0      # EMA faults/step to start shedding
+    alpha: float = 0.3               # EMA smoothing
+    backlog_factor: int = 4          # shed queue beyond batch·factor
+    pressure: float = 0.0
+    _step_faults: int = 0
+
+    def record_fault(self, n: int = 1) -> None:
+        self._step_faults += n
+
+    def end_step(self) -> None:
+        self.pressure = ((1.0 - self.alpha) * self.pressure
+                         + self.alpha * self._step_faults)
+        self._step_faults = 0
+
+    def state(self) -> str:
+        if self.pressure >= self.shed_threshold:
+            return SHEDDING
+        if self.pressure >= self.degrade_threshold:
+            return DEGRADED
+        return HEALTHY
+
+    def effective_batch(self, max_batch: int) -> int:
+        """Batch-size ceiling under the current health state."""
+        s = self.state()
+        if s == HEALTHY:
+            return max_batch
+        if s == DEGRADED:
+            return max(1, max_batch // 2)
+        return max(1, max_batch // 4)
+
+    def shed_count(self, queued: int, max_batch: int) -> int:
+        """How many lowest-priority queued requests to drop this step."""
+        if self.state() != SHEDDING:
+            return 0
+        keep = self.effective_batch(max_batch) * self.backlog_factor
+        return max(0, queued - keep)

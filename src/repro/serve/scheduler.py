@@ -35,6 +35,22 @@ class AdmissionQueue:
     def pop(self) -> FheRequest:
         return heapq.heappop(self._heap)[-1]
 
+    def shed_lowest(self, k: int) -> list[FheRequest]:
+        """Remove and return the ``k`` least-urgent queued requests.
+
+        "Least urgent" is the max of the heap ordering — lowest priority,
+        then laxest deadline, then newest.  Used by the overload controller
+        when the engine enters SHEDDING: dropping from the lax tail keeps
+        urgent tenants' latency bounded instead of letting the whole queue
+        rot."""
+        shed = []
+        for _ in range(min(k, len(self._heap))):
+            worst = max(range(len(self._heap)),
+                        key=lambda i: self._heap[i][:3])
+            shed.append(self._heap.pop(worst)[-1])
+        heapq.heapify(self._heap)
+        return shed
+
     def peek(self) -> FheRequest:
         return self._heap[0][-1]
 
