@@ -151,11 +151,13 @@ def main(argv=None) -> dict:
     uploads = steady_state_uploads(1024)
     counts = trace_counts(256)
 
+    from benchmarks.bench_env import gate_env, run_env
     result = {
         "bench": "bconv",
         "N": N,
         "config": {"quick": bool(args.quick), "reps": reps,
                    "oracle_sizes": list(sizes)},
+        "env": run_env(),
         "raw": raw,
         "keyswitch": keyswitch,
         "oracle": exact,
@@ -165,6 +167,7 @@ def main(argv=None) -> dict:
         # benchmarks/check_bench_regression.py in CI; numeric values must not
         # grow versus the committed baseline, booleans must stay true.
         "gate": {
+            **gate_env(),
             "bconv_macs": counts["bconv_macs"],
             "limb_ntts": counts["limb_ntts"],
             "butterflies": counts["butterflies"],

@@ -240,17 +240,21 @@ def run(reps: int, N: int, L: int, rates) -> dict:
     all_terminal = (all(s["all_terminal"] for s in scenarios)
                     and staging["all_terminal"])
     r0 = min(rates)
+    from benchmarks.bench_env import gate_env, run_env
     out = {
         "bench": "chaos",
         "params": {"N": p.N, "L": p.L, "dnum": p.dnum,
                    "tenants": len(TENANTS), "wave": WAVE, "reps": reps,
                    "rates": list(rates)},
+        "env": run_env(),
         "launch_faults": {str(r): v for r, v in launch.items()},
         "bitflip": bitflip,
         "staging": staging,
         "guard_overhead": overhead,
         "gate": {
-            # booleans: invariants; numbers: must not grow vs baseline
+            # booleans: invariants; numbers: must not grow vs baseline;
+            # strings (mode/backend): must equal the baseline's
+            **gate_env(),
             "zero_wrong_answers": bool(wrong_total == 0),
             "all_requests_terminal": bool(all_terminal),
             "goodput_lowest_rate_ge_90pct":

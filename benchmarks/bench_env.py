@@ -1,0 +1,36 @@
+"""Shared execution-mode provenance for every BENCH_*.json emitter.
+
+Interpret-mode and compiled-mode numbers must never be conflated (the whole
+point of the ``tier1-compiled`` CI job), so each bench embeds
+
+* ``run_env()`` as its top-level ``"env"`` object — requested vs resolved
+  kernel mode, the cached backend probe, per-mode launch tallies, and the
+  exact autotuned launch configs the run resolved
+  (:func:`repro.kernels.autotune.resolved_configs`);
+* ``gate_env()`` inside its ``"gate"`` section — the resolved
+  ``{mode, backend}`` pair as STRING gate values, which
+  ``benchmarks/check_bench_regression.py`` requires to EQUAL the committed
+  baseline.  A candidate produced in a different mode than the baseline
+  fails the gate instead of silently comparing apples to oranges.
+"""
+from __future__ import annotations
+
+
+def run_env() -> dict:
+    from repro.kernels import autotune, config
+    return {
+        "mode_requested": config.get_mode(),
+        "mode": config.resolved_mode(),
+        "backend": config.backend(),
+        "compile_supported": config.compile_supported(),
+        "compile_fallback_warned": config.compile_fallback_warned(),
+        "launches_by_mode": config.mode_launch_counts(),
+        "autotune_cache": str(autotune.cache_path()),
+        "autotune_entries": len(autotune.entries()),
+        "config": autotune.resolved_configs(),
+    }
+
+
+def gate_env() -> dict:
+    from repro.kernels import config
+    return {"mode": config.resolved_mode(), "backend": config.backend()}

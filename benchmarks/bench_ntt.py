@@ -189,6 +189,7 @@ def main(argv=None) -> dict:
     kernel = bench_kernel(N, ell, reps)
     oracle = verify_kernel_oracle(sizes)
 
+    from benchmarks.bench_env import gate_env, run_env
     result = {
         "bench": "ntt",
         "N": N,
@@ -198,6 +199,7 @@ def main(argv=None) -> dict:
         # cross-PR trajectory never compares the two silently.
         "config": {"quick": bool(args.quick), "reps": reps,
                    "oracle_sizes": list(sizes)},
+        "env": run_env(),
         "ops_per_limb": op_counts(N),
         "iterative": iterative,
         "four_step": four_step,
@@ -207,6 +209,7 @@ def main(argv=None) -> dict:
         # benchmarks/check_bench_regression.py in CI; numeric values must not
         # grow versus the committed baseline, booleans must stay true.
         "gate": {
+            **gate_env(),
             "selects_per_transform": op_counts(N)["selects_after"],
             "gathers_per_transform": op_counts(N)["gathers_after"],
             "oracle_exact": all(v["exact"] for v in oracle.values()),

@@ -224,10 +224,12 @@ def main(argv=None) -> dict:
     parity = verify_fused_parity(128)
     uploads = steady_state_uploads(256)
 
+    from benchmarks.bench_env import gate_env, run_env
     result = {
         "bench": "rotation",
         "config": {"quick": bool(args.quick), "reps": reps,
                    "oracle_sizes": list(sizes)},
+        "env": run_env(),
         "raw_automorphism": raw,
         "hoisted": hoisted,
         "linear_transform": lt,
@@ -242,6 +244,7 @@ def main(argv=None) -> dict:
         # count differs 8× between the grids, so the margin is structural,
         # not noise.
         "gate": {
+            **gate_env(),
             "raw_speedup_at_least_5x": raw["speedup_min"] >= 5.0,
             "oracle_exact": exact["all_exact"],
             "fused_eager_parity": parity,

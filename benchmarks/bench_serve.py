@@ -119,10 +119,12 @@ def run(reps: int, N: int, L: int) -> dict:
     seq_rps = WAVE / min(seq_times)
     decreasing = all(per_req[a] > per_req[b]
                      for a, b in zip(BATCHES, BATCHES[1:]))
+    from benchmarks.bench_env import gate_env, run_env
     out = {
         "bench": "serve",
         "params": {"N": p.N, "L": p.L, "dnum": p.dnum,
                    "tenants": len(TENANTS), "wave": WAVE, "reps": reps},
+        "env": run_env(),
         "requests_per_s": {str(B): rps[B] for B in BATCHES},
         "sequential_requests_per_s": seq_rps,
         "speedup_b16_vs_sequential": rps[16] / seq_rps,
@@ -131,7 +133,9 @@ def run(reps: int, N: int, L: int) -> dict:
         "steady_state_uploads": {str(B): uploads[B] for B in BATCHES},
         "steady_plan_builds": {str(B): plan_builds[B] for B in BATCHES},
         "gate": {
-            # booleans: invariants; numbers: must not grow vs baseline
+            # booleans: invariants; numbers: must not grow vs baseline;
+            # strings (mode/backend): must equal the baseline's
+            **gate_env(),
             "batched_speedup_at_least_3x": bool(rps[16] / seq_rps >= 3.0),
             "launches_per_request_strictly_decreasing": bool(decreasing),
             "batched_equals_sequential": bool(exact),

@@ -1,5 +1,5 @@
-"""CI bench-regression gate: compare a fresh BENCH_*.json against the
-committed baseline and fail on deterministic regressions.
+"""CI bench-regression gate: compare fresh BENCH_*.json files against the
+committed baselines and fail on deterministic regressions.
 
 Every bench emits a ``gate`` object of deterministic values:
 
@@ -8,26 +8,32 @@ Every bench emits a ``gate`` object of deterministic values:
     (lower is an improvement and is reported, silently growing is a
     regression and fails);
   * boolean fields are invariants (kernel-vs-oracle exactness) — the
-    candidate must be ``true``.
+    candidate must be ``true``;
+  * string fields are provenance (``mode``/``backend`` from
+    ``benchmarks/bench_env.py``) — the candidate must EQUAL the baseline, so
+    interpret-mode and compiled-mode numbers are never silently conflated.
 
 Wall-clock numbers are deliberately NOT gated: CI runners are noisy-neighbour
 machines, so timing lives in the artifact for trend inspection only.
 
-    python -m benchmarks.check_bench_regression \
-        --baseline BENCH_ntt.json --candidate /tmp/BENCH_ntt.json \
-        --baseline BENCH_bconv.json --candidate /tmp/BENCH_bconv.json
+**Auto-discovery (the default)**: every ``BENCH_*.json`` committed at the
+repo root is a baseline, and each must have a same-named candidate in
+``--candidate-dir`` — a committed bench with no candidate FAILS the gate, so
+new benches can never silently drop out of CI::
 
-Registered gates: BENCH_ntt.json (bench_ntt), BENCH_bconv.json
-(bench_bconv), BENCH_rotation.json (bench_rotation), BENCH_serve.json
-(bench_serve — serving throughput/batching invariants), BENCH_chaos.json
-(bench_chaos — fault-injection resilience: zero wrong answers, goodput
-under faults, deterministic replay, tenant isolation, guard overhead); see
-the bench-gate job in .github/workflows/ci.yml for the canonical pairing.
+    python -m benchmarks.check_bench_regression --candidate-dir /tmp
+
+Explicit pairing (subset runs, e.g. the compiled smoke job) stays available::
+
+    python -m benchmarks.check_bench_regression \
+        --baseline BENCH_ntt.json --candidate /tmp/BENCH_ntt.json
 """
 import argparse
 import json
 import sys
 from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
 
 
 def check_pair(baseline: Path, candidate: Path) -> list[str]:
@@ -48,6 +54,12 @@ def check_pair(baseline: Path, candidate: Path) -> list[str]:
         if isinstance(bval, bool):
             if cval is not True:
                 errors.append(f"[{name}] {key}: expected true, got {cval}")
+        elif isinstance(bval, str):
+            if cval != bval:
+                errors.append(
+                    f"[{name}] {key}: {cval!r} != baseline {bval!r} — "
+                    "candidate was produced under a different execution "
+                    "environment than the committed baseline")
         elif cval > bval:
             errors.append(f"[{name}] {key}: {cval} > baseline {bval}")
         elif cval < bval:
@@ -61,18 +73,61 @@ def check_pair(baseline: Path, candidate: Path) -> list[str]:
     return errors
 
 
+def discover_pairs(baseline_dir: Path, candidate_dir: Path):
+    """Pair every committed BENCH_*.json with its same-named candidate.
+
+    Returns ``(pairs, errors)`` — a committed baseline with no candidate is
+    an error (the bench dropped out of the gate), as is an empty manifest.
+    """
+    baselines = sorted(baseline_dir.glob("BENCH_*.json"))
+    if not baselines:
+        return [], [f"{baseline_dir}: no committed BENCH_*.json baselines "
+                    "found — wrong --baseline-dir?"]
+    pairs, errors = [], []
+    for b in baselines:
+        c = candidate_dir / b.name
+        if c.exists():
+            pairs.append((b, c))
+        else:
+            errors.append(
+                f"{b.name}: committed baseline has NO candidate in "
+                f"{candidate_dir} — every committed bench must run in the "
+                "gate (add its bench step, or remove the baseline)")
+    return pairs, errors
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--baseline", action="append", type=Path, required=True,
-                    help="committed BENCH_*.json (repeatable, paired in order)")
-    ap.add_argument("--candidate", action="append", type=Path, required=True,
+    ap.add_argument("--baseline", action="append", type=Path, default=None,
+                    help="committed BENCH_*.json (repeatable, paired in "
+                         "order; explicit subset mode)")
+    ap.add_argument("--candidate", action="append", type=Path, default=None,
                     help="freshly produced BENCH_*.json (repeatable)")
+    ap.add_argument("--candidate-dir", type=Path, default=None,
+                    help="auto-discovery mode: directory holding one "
+                         "candidate per committed BENCH_*.json baseline")
+    ap.add_argument("--baseline-dir", type=Path, default=REPO_ROOT,
+                    help="where committed baselines live (default: repo root)")
     args = ap.parse_args(argv)
-    if len(args.baseline) != len(args.candidate):
-        print("--baseline and --candidate must be paired", file=sys.stderr)
-        return 2
-    errors = []
-    for b, c in zip(args.baseline, args.candidate):
+
+    if args.candidate_dir is not None:
+        if args.baseline or args.candidate:
+            print("--candidate-dir is exclusive with --baseline/--candidate",
+                  file=sys.stderr)
+            return 2
+        pairs, errors = discover_pairs(args.baseline_dir, args.candidate_dir)
+        print(f"discovered {len(pairs)} baseline/candidate pair(s) in "
+              f"{args.baseline_dir}")
+    else:
+        if not args.baseline or not args.candidate:
+            print("need --candidate-dir, or paired --baseline/--candidate",
+                  file=sys.stderr)
+            return 2
+        if len(args.baseline) != len(args.candidate):
+            print("--baseline and --candidate must be paired", file=sys.stderr)
+            return 2
+        pairs, errors = list(zip(args.baseline, args.candidate)), []
+    for b, c in pairs:
         errors += check_pair(b, c)
     for e in errors:
         print(f"REGRESSION: {e}", file=sys.stderr)

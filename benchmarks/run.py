@@ -35,9 +35,14 @@ def main() -> None:
         sections.append(("Fig. 7 from compiled HLO", bench_limbdup_hlo.main))
     if not args.skip_measured:
         from benchmarks import bench_chaos, bench_ntt, bench_serve
+        from repro.kernels import autotune
         # machine-readable BENCH_*.json candidates go to /tmp — the committed
         # repo-root baselines are the CI comparison targets and must only be
         # refreshed deliberately (full-rep runs, see README)
+        sections.append(("Kernel autotune sweep (launch configs)",
+                         lambda: autotune.main(
+                             ["--N", "1024", "--L", "4", "--quick",
+                              "--reps", "3"])))
         sections.append(("NTT micro-bench (measured)",
                          lambda: bench_ntt.main(
                              ["--quick", "--out", "/tmp/BENCH_ntt.json"])))

@@ -149,23 +149,28 @@ def _record(x, src, dst):
     trace.record("bconv_out", len(dst), x.shape[-1], count)
 
 
-def bconv_raw(x, src: tuple[int, ...], dst: tuple[int, ...]):
+def bconv_raw(x, src: tuple[int, ...], dst: tuple[int, ...],
+              tile: int | None = None, block_b: int | None = None):
     """(…, ℓ, N) coeff-domain residues in ``src`` → (…, K, N) in ``dst``.
 
     Dispatches to the Pallas BConvU kernel by default (all leading dims
     batched into one grid); falls back to the jnp path under an active
-    ``mapping_scope`` or when the engine is pinned to "eager".
+    ``mapping_scope`` or when the engine is pinned to "eager".  ``tile`` /
+    ``block_b`` pin the kernel launch config; left ``None`` they resolve
+    through the autotuned config cache (``repro.kernels.autotune``) at the
+    kernel wrapper — the eager engine has no launch knobs and ignores them.
     """
     src, dst = tuple(src), tuple(dst)
     if _engine == "eager" or _active_policy.get() is not None:
         return bconv_raw_eager(x, src, dst)
     _record(x, src, dst)
-    return _bconv_pallas(x, src, dst)
+    return _bconv_pallas(x, src, dst, tile=tile, block_b=block_b)
 
 
-def _bconv_pallas(x, src: tuple[int, ...], dst: tuple[int, ...]):
+def _bconv_pallas(x, src: tuple[int, ...], dst: tuple[int, ...],
+                  tile: int | None = None, block_b: int | None = None):
     from repro.kernels.bconv import ops as bconv_ops
-    return bconv_ops.bconv(x, src, dst)
+    return bconv_ops.bconv(x, src, dst, tile=tile, block_b=block_b)
 
 
 def bconv_raw_eager(x, src: tuple[int, ...], dst: tuple[int, ...]):
@@ -189,9 +194,12 @@ def bconv_raw_eager(x, src: tuple[int, ...], dst: tuple[int, ...]):
     return _constrain(out, lambda pol, mesh: pol.bconv_output(mesh))
 
 
-def bconv(x: pl.RnsPoly, dst: tuple[int, ...]) -> pl.RnsPoly:
+def bconv(x: pl.RnsPoly, dst: tuple[int, ...],
+          tile: int | None = None, block_b: int | None = None) -> pl.RnsPoly:
     assert x.domain == pl.COEFF, "BConv operates on coefficient-domain limbs"
-    return pl.RnsPoly(bconv_raw(x.data, x.basis, dst), tuple(dst), pl.COEFF)
+    return pl.RnsPoly(bconv_raw(x.data, x.basis, dst, tile=tile,
+                                block_b=block_b),
+                      tuple(dst), pl.COEFF)
 
 
 def centered_lift_single(x, src_q: int, dst: tuple[int, ...]):

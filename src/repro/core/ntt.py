@@ -95,6 +95,26 @@ def stacked_ntt_consts(basis: tuple[int, ...], N: int) -> NttConsts:
     )
 
 
+def balanced_submodules(N: int) -> int:
+    """CiFHER's balanced default submodule count: R = √N (power of two).
+
+    The untuned fallback for the four-step R×C split — the kernel wrapper
+    (``repro.kernels.ntt.ops``) and the autotuner
+    (``repro.kernels.autotune``) both resolve R through here when no tuned
+    entry exists for the shape, so the recomposition policy has ONE home.
+    """
+    R = 1
+    while R * R < N:
+        R *= 2
+    return R
+
+
+def valid_submodules(N: int, R) -> bool:
+    """True when R is a usable four-step split: power of two with C = N/R ≥ 2."""
+    return (isinstance(R, int) and R >= 2 and (R & (R - 1)) == 0
+            and N % R == 0 and N // R >= 2)
+
+
 # ----------------------------------------------------------------------------
 # Gather-free bit reversal
 # ----------------------------------------------------------------------------

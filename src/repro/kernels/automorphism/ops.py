@@ -1,26 +1,38 @@
 """Public wrappers: rotate/conjugate NTT-domain polys and the fused AutoU∘KS.
 
 Perm tables are device-resident via :mod:`repro.core.const_cache` (staged once
-per (N, g) — zero per-call uploads) and the execution mode resolves through
-:mod:`repro.kernels.config` (``REPRO_KERNEL_MODE``), like every kernel family.
+per (N, g) — zero per-call uploads), the execution mode resolves through
+:mod:`repro.kernels.config` (``REPRO_KERNEL_MODE``), and an unpinned
+``limbs_per_block`` resolves through the autotuned config cache
+(:func:`repro.kernels.autotune.best_config`), like every kernel family.
 """
 from __future__ import annotations
 
 from repro.core import const_cache
 from repro.core import poly as pl_core
-from repro.kernels import config
+from repro.kernels import autotune, config
 
 from .kernel import (auto_ks_pallas, automorphism_multi_pallas,
                      automorphism_pallas)
 
 
+def _resolve_lpb(family: str, N: int, ell: int, limbs_per_block):
+    if limbs_per_block is None:
+        limbs_per_block = autotune.best_config(family, N, ell)\
+            .get("limbs_per_block")
+    return limbs_per_block
+
+
 def apply_galois(x, N: int, g: int, interpret: bool | None = None,
                  limbs_per_block: int | None = None):
     """x: (..., N) u32 → φ_g(x), batched over all leading dims in one launch."""
+    ell = x.shape[-2] if x.ndim > 1 else 1
+    limbs_per_block = _resolve_lpb("automorphism", N, ell, limbs_per_block)
     perm = const_cache.device_galois_perm(N, g)
-    config.count_launch("automorphism")
+    interp = config.resolve_interpret(interpret)
+    config.count_launch("automorphism", interpret=interp)
     return automorphism_pallas(x, perm, limbs_per_block=limbs_per_block,
-                               interpret=config.resolve_interpret(interpret))
+                               interpret=interp)
 
 
 def apply_rotation(x, N: int, r: int, interpret: bool | None = None,
@@ -33,11 +45,13 @@ def apply_galois_many(x, N: int, gs: tuple, interpret: bool | None = None,
                       limbs_per_block: int | None = None):
     """x: (G, L, N) with G ∈ {1, len(gs)} → (R, L, N), one launch for the
     whole rotation set (G = 1 broadcasts a shared operand)."""
+    limbs_per_block = _resolve_lpb("automorphism", N, x.shape[-2],
+                                   limbs_per_block)
     perms = const_cache.device_galois_perm_stack(N, tuple(gs))
-    config.count_launch("automorphism")
+    interp = config.resolve_interpret(interpret)
+    config.count_launch("automorphism", interpret=interp)
     return automorphism_multi_pallas(
-        x, perms, limbs_per_block=limbs_per_block,
-        interpret=config.resolve_interpret(interpret))
+        x, perms, limbs_per_block=limbs_per_block, interpret=interp)
 
 
 def auto_ks(exts, evk_a, evk_b, N: int, gs: tuple, basis: tuple[int, ...],
@@ -50,10 +64,13 @@ def auto_ks(exts, evk_a, evk_b, N: int, gs: tuple, basis: tuple[int, ...],
     constants (q, Montgomery, Barrett) come device-resident from
     :func:`repro.core.const_cache.device_ntt_consts`.
     """
+    limbs_per_block = _resolve_lpb("auto_ks", N, exts.shape[-2],
+                                   limbs_per_block)
     c = const_cache.device_ntt_consts(tuple(basis), N)
     perms = const_cache.device_galois_perm_stack(N, tuple(gs))
-    config.count_launch("auto_ks")
+    interp = config.resolve_interpret(interpret)
+    config.count_launch("auto_ks", interpret=interp)
     return auto_ks_pallas(exts, evk_a, evk_b, perms,
                           c.q, c.qinv_neg, c.r2, c.mu_hi, c.mu_lo,
                           limbs_per_block=limbs_per_block,
-                          interpret=config.resolve_interpret(interpret))
+                          interpret=interp)

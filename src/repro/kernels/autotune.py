@@ -1,0 +1,367 @@
+"""Per-shape kernel autotuner + persistent config cache (EFFACT-style tuning).
+
+CiFHER's right-sizing claim only holds if every kernel family runs its best
+launch configuration *per shape and per backend* — the knobs already exist
+(NTT ``limbs_per_block``/``R``, BConv ``tile``/``block_b``, automorphism and
+eltwise limb blocks), but until now every call site either pinned them by
+hand or fell back to one hardcoded default that was picked on a CPU
+interpret-mode container.  This module closes the loop:
+
+* :func:`candidates` enumerates a DETERMINISTIC sweep grid per
+  (family, N, L) — sorted, duplicate-free, every entry valid for the shape
+  (divisibility constraints are resolved here, not at run time);
+* :func:`autotune` times each candidate with real executions in the
+  currently-resolved mode (``REPRO_KERNEL_MODE`` — compiled where the
+  backend supports it) and records the winner;
+* the winners persist in a JSON **config cache** keyed
+  ``family/N=../L=../backend/mode`` (the launch-config analogue of the PR-4
+  plan cache: resolve once, look up forever).  Path:
+  ``REPRO_AUTOTUNE_CACHE`` env var, else
+  ``~/.cache/repro-cifher/autotune.json``;
+* :func:`best_config` is the hot-path lookup every kernel wrapper consults
+  when the caller does not pin a knob — a cold cache returns the historical
+  hardcoded defaults (:data:`DEFAULTS`), so untuned behavior is bit- and
+  perf-identical to the pre-autotuner tree.  Lookups are memoized per
+  (family, N, L, backend, mode) and logged (:func:`resolved_configs`) so
+  benchmarks can record exactly which configs produced their numbers.
+
+CLI (the nightly backend matrix runs this and uploads the cache artifact)::
+
+    PYTHONPATH=src python -m repro.kernels.autotune \
+        --families ntt bconv --N 4096 --L 8 --out /tmp/autotune.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.kernels import config as kconfig
+
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+CACHE_VERSION = 1
+
+# The pre-autotuner hardcoded launch configs, now the cold-cache fallback.
+# Keep in sync with the kernel signatures: these are exactly the values the
+# wrappers used before the autotuner existed, so an empty cache is a no-op.
+DEFAULTS: dict[str, dict] = {
+    "ntt": {"limbs_per_block": 4},            # R defaults to √N in the wrapper
+    "bconv": {"tile": 2048, "block_b": 4},
+    "automorphism": {"limbs_per_block": 4},
+    "auto_ks": {"limbs_per_block": 4},
+    "eltwise": {"tile": 4096, "limbs_per_block": 4},
+}
+FAMILIES = tuple(DEFAULTS)
+
+
+# ----------------------------------------------------------------------------
+# Config cache (persistent JSON, lazy-loaded, memoized lookups)
+# ----------------------------------------------------------------------------
+
+_path_override: Path | None = None
+_entries: dict | None = None      # lazy-loaded {key: entry}
+_memo: dict = {}                  # (family, N, L, backend, mode) -> config
+_resolved_log: dict = {}          # key -> {"config": .., "source": ..}
+
+
+def cache_path() -> Path:
+    """Resolution order: set_cache_path() > $REPRO_AUTOTUNE_CACHE > default."""
+    if _path_override is not None:
+        return _path_override
+    env = os.environ.get(CACHE_ENV)
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "repro-cifher" / "autotune.json"
+
+
+def set_cache_path(path: Path | str | None) -> None:
+    """Point the config cache at ``path`` (None restores the default chain).
+
+    Drops the loaded entries and every memoized lookup — tests use this for
+    isolation, the CLI for writing to an artifact location.
+    """
+    global _path_override, _entries
+    _path_override = Path(path) if path is not None else None
+    _entries = None
+    _memo.clear()
+    _resolved_log.clear()
+
+
+def _load() -> dict:
+    global _entries
+    if _entries is None:
+        p = cache_path()
+        if p.exists():
+            try:
+                doc = json.loads(p.read_text())
+                _entries = dict(doc.get("entries", {}))
+            except (json.JSONDecodeError, OSError):
+                _entries = {}
+        else:
+            _entries = {}
+    return _entries
+
+
+def save() -> Path:
+    """Write the in-memory entries to :func:`cache_path` (mkdir as needed)."""
+    p = cache_path()
+    p.parent.mkdir(parents=True, exist_ok=True)
+    doc = {"version": CACHE_VERSION,
+           "entries": {k: _load()[k] for k in sorted(_load())}}
+    p.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    return p
+
+
+def cache_key(family: str, N: int, ell: int, backend: str | None = None,
+              mode: str | None = None) -> str:
+    backend = backend or kconfig.backend()
+    mode = mode or kconfig.resolved_mode()
+    return f"{family}/N={N}/L={ell}/{backend}/{mode}"
+
+
+def record(family: str, N: int, ell: int, entry: dict, *,
+           persist: bool = True) -> str:
+    """Store a tuned entry ({"config": ..., "us": ..., ...}) and persist it."""
+    key = cache_key(family, N, ell)
+    _load()[key] = entry
+    _memo.clear()
+    _resolved_log.clear()
+    if persist:
+        save()
+    return key
+
+
+def entries() -> dict:
+    """The loaded cache entries (read-only view for benches/tests)."""
+    return dict(_load())
+
+
+def best_config(family: str, N: int, ell: int) -> dict:
+    """The launch config the wrappers use when the caller pins nothing.
+
+    Cache hit → the tuned winner for (family, N, L, backend, resolved mode);
+    miss → :data:`DEFAULTS[family]` (the historical hardcoded values).
+    Memoized — steady-state cost is one dict lookup per dispatch.
+    """
+    if family not in DEFAULTS:
+        raise ValueError(f"unknown kernel family {family!r} — one of {FAMILIES}")
+    mk = (family, N, ell, kconfig.backend(), kconfig.resolved_mode())
+    hit = _memo.get(mk)
+    if hit is not None:
+        return hit
+    key = cache_key(family, N, ell)
+    entry = _load().get(key)
+    cfg = dict(DEFAULTS[family])
+    source = "default"
+    if entry and isinstance(entry.get("config"), dict):
+        cfg.update(entry["config"])
+        source = "cache"
+    _memo[mk] = cfg
+    _resolved_log[key] = {"config": cfg, "source": source}
+    return cfg
+
+
+def resolved_configs() -> dict:
+    """Every :func:`best_config` lookup this process resolved so far:
+    ``{cache_key: {"config": {...}, "source": "cache"|"default"}}`` — the
+    benchmarks embed this in their JSON so numbers are attributable to the
+    exact launch configs that produced them."""
+    return {k: dict(v) for k, v in sorted(_resolved_log.items())}
+
+
+# ----------------------------------------------------------------------------
+# Sweep grids (deterministic) + timed measurement
+# ----------------------------------------------------------------------------
+
+def _pow2s(lo: int, hi: int):
+    v = 1
+    while v < lo:
+        v *= 2
+    while v <= hi:
+        yield v
+        v *= 2
+
+
+def _limb_blocks(ell: int) -> list[int]:
+    """Distinct effective limb blocks for ℓ limbs (divisors via the shared
+    clamp), ascending — identical on every call (deterministic sweep)."""
+    return sorted({kconfig.effective_block(ell, w)
+                   for w in (1, 2, 4, 8, 16, 32) if w <= max(ell, 1)})
+
+
+def _tiles(N: int, cap: int = 4096) -> list[int]:
+    return [t for t in (256, 512, 1024, 2048, 4096)
+            if t <= min(N, cap) and N % t == 0] or [N]
+
+
+def _ntt_Rs(N: int) -> list[int]:
+    from repro.core.ntt import balanced_submodules
+    base = balanced_submodules(N)
+    lo, hi = max(2, base // 4), min(N // 2, base * 4)
+    return [R for R in _pow2s(lo, hi) if N // R >= 2]
+
+
+def candidates(family: str, N: int, ell: int) -> list[dict]:
+    """The deterministic sweep grid for one (family, N, L) shape.
+
+    Sorted by knob values, duplicate-free, every entry valid (tiles divide N,
+    R keeps C = N/R ≥ 2).  Two calls with the same arguments return the same
+    list in the same order — the tie-break in :func:`autotune` (first wins)
+    is therefore reproducible.
+    """
+    if family == "ntt":
+        return [{"limbs_per_block": L, "R": R}
+                for L in _limb_blocks(ell) for R in _ntt_Rs(N)]
+    if family == "bconv":
+        return [{"tile": t, "block_b": b}
+                for t in _tiles(N, cap=2048) for b in (1, 2, 4, 8)]
+    if family == "eltwise":
+        return [{"tile": t, "limbs_per_block": L}
+                for t in _tiles(N) for L in _limb_blocks(ell)]
+    if family in ("automorphism", "auto_ks"):
+        return [{"limbs_per_block": L} for L in _limb_blocks(ell)]
+    raise ValueError(f"unknown kernel family {family!r} — one of {FAMILIES}")
+
+
+def _rand_limbs(basis, N, seed, lead=()):
+    rng = np.random.default_rng(seed)
+    out = np.stack([rng.integers(0, q, (*lead, N)).astype(np.uint32)
+                    for q in basis], axis=-2)
+    import jax.numpy as jnp
+    return jnp.asarray(out)
+
+
+def _build_runner(family: str, N: int, ell: int):
+    """A closure ``run(cfg)`` executing one dispatch of ``family`` with the
+    candidate's knobs pinned (pinned knobs bypass best_config — no
+    recursion) plus the operand set it closes over."""
+    import jax
+
+    from repro.core import rns
+    if family == "ntt":
+        from repro.kernels.ntt import ops as ntt_ops
+        basis = tuple(rns.gen_ntt_primes(ell, N))
+        x = _rand_limbs(basis, N, seed=0, lead=(2,))
+        return lambda cfg: jax.block_until_ready(
+            ntt_ops.ntt_fwd(x, basis, R=cfg["R"],
+                            limbs_per_block=cfg["limbs_per_block"]))
+    if family == "bconv":
+        from repro.kernels.bconv import ops as bconv_ops
+        primes = rns.gen_ntt_primes(2 * ell, N)
+        src, dst = tuple(primes[:ell]), tuple(primes[ell:])
+        x = _rand_limbs(src, N, seed=1, lead=(4,))
+        return lambda cfg: jax.block_until_ready(
+            bconv_ops.bconv(x, src, dst, tile=cfg["tile"],
+                            block_b=cfg["block_b"]))
+    if family == "eltwise":
+        from repro.kernels.eltwise import ops as elt_ops
+        basis = tuple(rns.gen_ntt_primes(ell, N))
+        a = _rand_limbs(basis, N, seed=2, lead=(2,))
+        b = _rand_limbs(basis, N, seed=3, lead=(2,))
+        return lambda cfg: jax.block_until_ready(
+            elt_ops.eltwise("mac", basis, a, b, b, a, tile=cfg["tile"],
+                            limbs_per_block=cfg["limbs_per_block"]))
+    if family == "automorphism":
+        from repro.kernels.automorphism import ops as auto_ops
+        basis = tuple(rns.gen_ntt_primes(ell, N))
+        x = _rand_limbs(basis, N, seed=4, lead=(2,))
+        return lambda cfg: jax.block_until_ready(
+            auto_ops.apply_galois(x, N, 5,
+                                  limbs_per_block=cfg["limbs_per_block"]))
+    if family == "auto_ks":
+        from repro.kernels.automorphism import ops as auto_ops
+        basis = tuple(rns.gen_ntt_primes(ell, N))
+        J, R = 2, 4
+        exts = _rand_limbs(basis, N, seed=5, lead=(J, 1))
+        evk_a = _rand_limbs(basis, N, seed=6, lead=(R, J))
+        evk_b = _rand_limbs(basis, N, seed=7, lead=(R, J))
+        gs = tuple(pow(5, r + 1, 2 * N) for r in range(R))
+        return lambda cfg: jax.block_until_ready(
+            auto_ops.auto_ks(exts, evk_a, evk_b, N, gs, basis,
+                             limbs_per_block=cfg["limbs_per_block"]))
+    raise ValueError(f"unknown kernel family {family!r} — one of {FAMILIES}")
+
+
+def measure(run, cfg: dict, reps: int = 3) -> float:
+    """Median wall-clock (µs) of ``run(cfg)`` after one warm-up/compile call."""
+    run(cfg)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        run(cfg)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+def autotune(family: str, N: int, ell: int, *, reps: int = 3,
+             persist: bool = True, max_candidates: int | None = None) -> dict:
+    """Sweep the (family, N, L) grid with timed runs and record the winner.
+
+    Runs in the currently-resolved execution mode (pin with
+    ``kconfig.use_mode``); ties break toward the earlier candidate in the
+    deterministic :func:`candidates` order.  Returns the stored entry.
+    """
+    cands = candidates(family, N, ell)
+    if max_candidates:
+        cands = cands[:max_candidates]
+    run = _build_runner(family, N, ell)
+    timed = [(measure(run, cfg, reps=reps), i, cfg)
+             for i, cfg in enumerate(cands)]
+    us, _, winner = min(timed, key=lambda t: (t[0], t[1]))
+    entry = {
+        "config": winner,
+        "us": us,
+        "swept": len(cands),
+        "reps": reps,
+        "mode": kconfig.resolved_mode(),
+        "backend": kconfig.backend(),
+        "sweep": [{"config": cfg, "us": t} for t, _, cfg in timed],
+    }
+    record(family, N, ell, entry, persist=persist)
+    return entry
+
+
+def sweep(families=FAMILIES, Ns=(4096,), ells=(8,), *, reps: int = 3,
+          persist: bool = True, max_candidates: int | None = None) -> dict:
+    """Autotune every (family, N, L) combination; returns {key: entry}."""
+    out = {}
+    for family in families:
+        for N in Ns:
+            for ell in ells:
+                entry = autotune(family, N, ell, reps=reps, persist=persist,
+                                 max_candidates=max_candidates)
+                out[cache_key(family, N, ell)] = entry
+                print(f"autotune {cache_key(family, N, ell)}: "
+                      f"{entry['config']} ({entry['us']:.0f} us, "
+                      f"{entry['swept']} candidates)")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--families", nargs="+", default=list(FAMILIES),
+                    choices=list(FAMILIES))
+    ap.add_argument("--N", type=int, nargs="+", default=[4096])
+    ap.add_argument("--L", type=int, nargs="+", default=[8])
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--quick", action="store_true",
+                    help="cap each sweep at 6 candidates (CI smoke)")
+    ap.add_argument("--out", type=Path, default=None,
+                    help="config-cache path (default: env/cache-dir chain)")
+    args = ap.parse_args(argv)
+    if args.out is not None:
+        set_cache_path(args.out)
+    sweep(tuple(args.families), tuple(args.N), tuple(args.L), reps=args.reps,
+          max_candidates=6 if args.quick else None)
+    print(f"config cache -> {cache_path()} "
+          f"({len(entries())} entries, mode={kconfig.resolved_mode()}, "
+          f"backend={kconfig.backend()})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

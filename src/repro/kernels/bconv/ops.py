@@ -3,29 +3,41 @@ from __future__ import annotations
 
 from repro.core import const_cache
 from repro.core import modmath as mm
-from repro.kernels import config
+from repro.kernels import autotune, config
 
 
 def bconv(x, src: tuple[int, ...], dst: tuple[int, ...],
-          tile: int = 2048, block_b: int | None = None,
+          tile: int | None = None, block_b: int | None = None,
           interpret: bool | None = None):
     """(…, ℓ, N) coeff-domain residues in ``src`` → (…, K, N) in ``dst`` (HPS).
 
     All leading dims are flattened into the kernel's batch grid axis; every
     table/constant is device-resident via
     :func:`repro.core.const_cache.device_bconv_consts` (staged once per
-    (src, dst) — no per-call host→device uploads).  ``interpret=None``
-    resolves through :mod:`repro.kernels.config` (``REPRO_KERNEL_MODE``).
+    (src, dst) — no per-call host→device uploads).  Unpinned launch knobs
+    (``tile``, ``block_b``) resolve through the autotuned config cache
+    (:func:`repro.kernels.autotune.best_config`; cold cache → tile=2048,
+    block_b=4); ``interpret=None`` resolves through
+    :mod:`repro.kernels.config` (``REPRO_KERNEL_MODE``).
     """
     from .kernel import bconv_matmul_pallas
     src, dst = tuple(src), tuple(dst)
+    N = x.shape[-1]
+    if tile is None or block_b is None:
+        cfg = autotune.best_config("bconv", N, len(src))
+        if tile is None:
+            tile = cfg.get("tile", 2048)
+            if N % min(tile, N):  # stale/hand-edited cache entry
+                tile = N
+        if block_b is None:
+            block_b = cfg.get("block_b")
     c = const_cache.device_bconv_consts(src, dst)
     t = mm.mulmod_shoup(x, c.qhat_inv, c.qhat_inv_shoup, c.q_src)
     lead = t.shape[:-2]
     flat = t.reshape((-1,) + t.shape[-2:])
-    config.count_launch("bconv")
+    interp = config.resolve_interpret(interpret)
+    config.count_launch("bconv", interpret=interp)
     out = bconv_matmul_pallas(
         flat, c.table, c.table_shoup, c.q_dst, c.mu_hi, c.mu_lo,
-        tile=min(tile, x.shape[-1]), block_b=block_b,
-        interpret=config.resolve_interpret(interpret))
+        tile=min(tile, N), block_b=block_b, interpret=interp)
     return out.reshape(lead + out.shape[-2:])

@@ -8,25 +8,37 @@ behind one knob (same get/set/env/context-manager pattern as
 
 * ``REPRO_KERNEL_MODE=interpret`` — always run Pallas kernels in interpret
   mode (the only mode that executes on CPU backends);
-* ``REPRO_KERNEL_MODE=compile``   — always lower for real (TPU) execution;
-* ``REPRO_KERNEL_MODE=auto``      — (default) interpret everywhere except a
-  real TPU backend.
+* ``REPRO_KERNEL_MODE=compile``   — lower for real on backends whose Pallas
+  lowering exists (TPU Mosaic, GPU Triton); on an interpret-only backend
+  (CPU) the request falls back to interpret with a ONE-TIME
+  ``RuntimeWarning`` so CI logs show the divergence instead of silently
+  conflating modes;
+* ``REPRO_KERNEL_MODE=auto``      — (default) compile wherever the backend
+  supports it, interpret everywhere else.
+
+The backend probe (:func:`backend`) is resolved once and cached — ``auto``
+used to re-import jax and re-query ``jax.default_backend()`` on every kernel
+dispatch.
 
 Kernel wrappers take ``interpret: bool | None = None`` and resolve ``None``
 through :func:`resolve_interpret`; an explicit bool always wins (tests pin
 interpret mode regardless of backend).
 
-The module also keeps a per-family **kernel-launch counter**: each public op
-wrapper calls :func:`count_launch` once per dispatch, giving benchmarks a
+The module also keeps **kernel-launch counters**: each public op wrapper
+calls :func:`count_launch` once per dispatch, giving benchmarks a
 deterministic "how many kernel launches did this workload issue" metric
 (``benchmarks/bench_rotation.py`` gates the `linear_transform` launch count
 in CI — batching regressions show up as a growing counter, immune to
-wall-clock noise).
+wall-clock noise).  Launches are additionally tallied per execution mode
+(:func:`mode_launch_counts` / :func:`compiled_launches`), so a bench or test
+can assert that a workload actually ran compiled instead of quietly falling
+back to interpret.
 """
 from __future__ import annotations
 
 import collections
 import os
+import warnings
 
 _MODES = ("interpret", "compile", "auto")
 _mode = os.environ.get("REPRO_KERNEL_MODE", "auto")
@@ -65,12 +77,56 @@ class use_mode:
         return False
 
 
+# ----------------------------------------------------------------------------
+# Backend probe (cached) + compile support
+# ----------------------------------------------------------------------------
+
+# Backends with a real Pallas lowering (TPU Mosaic, GPU Triton).  Everything
+# else (notably CPU) raises "Only interpret mode is supported" from
+# pallas_call, so a compile request must fall back to interpret.
+_COMPILE_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+_backend: str | None = None
+
+
+def backend() -> str:
+    """The jax default backend ("cpu"|"gpu"|"tpu"), probed ONCE and cached.
+
+    Every kernel dispatch in ``auto`` mode consults this; the probe used to
+    be a per-call ``import jax; jax.default_backend()`` round trip.
+    """
+    global _backend
+    if _backend is None:
+        try:
+            import jax
+            _backend = jax.default_backend()
+        except Exception:  # pragma: no cover - jax always importable here
+            _backend = "cpu"
+    return _backend
+
+
+def compile_supported() -> bool:
+    """True when the cached backend can execute compiled Pallas kernels."""
+    return backend() in _COMPILE_BACKENDS
+
+
 def _auto_interpret() -> bool:
-    try:
-        import jax
-        return jax.default_backend() != "tpu"
-    except Exception:  # pragma: no cover - jax always importable here
-        return True
+    """``auto``-mode resolution against the CACHED backend probe."""
+    return not compile_supported()
+
+
+_warned_compile_fallback = False
+
+
+def compile_fallback_warned() -> bool:
+    """True once the one-time compile→interpret fallback warning has fired."""
+    return _warned_compile_fallback
+
+
+def reset_compile_fallback_warning() -> None:
+    """Re-arm the one-time fallback warning (test isolation)."""
+    global _warned_compile_fallback
+    _warned_compile_fallback = False
 
 
 def resolve_interpret(flag: bool | None = None) -> bool:
@@ -80,8 +136,28 @@ def resolve_interpret(flag: bool | None = None) -> bool:
     if _mode == "interpret":
         return True
     if _mode == "compile":
-        return False
+        if compile_supported():
+            return False
+        global _warned_compile_fallback
+        if not _warned_compile_fallback:
+            _warned_compile_fallback = True
+            warnings.warn(
+                f"REPRO_KERNEL_MODE=compile requested but backend "
+                f"{backend()!r} only supports interpret-mode Pallas — "
+                "falling back to interpret (warned once per process)",
+                RuntimeWarning, stacklevel=2)
+        return True
     return _auto_interpret()
+
+
+def resolved_mode(flag: bool | None = None) -> str:
+    """The execution mode dispatches actually run in: "interpret"|"compiled".
+
+    This is what benchmarks record in their ``{mode, backend}`` provenance —
+    the *requested* mode (:func:`get_mode`) may say ``compile`` while an
+    interpret-only backend forces the fallback.
+    """
+    return "interpret" if resolve_interpret(flag) else "compiled"
 
 
 def effective_block(B: int, requested: int | None, default: int = 4) -> int:
@@ -102,6 +178,10 @@ def effective_block(B: int, requested: int | None, default: int = 4) -> int:
 
 _launches: collections.Counter = collections.Counter()
 
+# per-(mode, family) dispatch tally: {"interpret": Counter, "compiled": Counter}
+_mode_launches: dict[str, collections.Counter] = {
+    "interpret": collections.Counter(), "compiled": collections.Counter()}
+
 # Optional pre-dispatch hook: called as hook(family, n) before the counter
 # moves.  The fault-injection framework (repro.runtime.faults) installs a
 # callback here that may raise TransientFault, modeling a chiplet fault at
@@ -116,12 +196,19 @@ def set_launch_hook(fn) -> None:
     _launch_hook = fn
 
 
-def count_launch(family: str, n: int = 1) -> None:
+def count_launch(family: str, n: int = 1, *,
+                 interpret: bool | None = None) -> None:
     """Record ``n`` kernel dispatches of the given family ("ntt", "bconv",
-    "eltwise", "automorphism", "auto_ks")."""
+    "eltwise", "automorphism", "auto_ks").
+
+    ``interpret`` is the RESOLVED interpret flag of the dispatch (wrappers
+    pass it so the per-mode tally reflects what actually ran); ``None``
+    resolves against the global mode.
+    """
     if _launch_hook is not None:
         _launch_hook(family, n)
     _launches[family] += n
+    _mode_launches[resolved_mode(interpret)][family] += n
 
 
 def launch_counts() -> dict:
@@ -134,9 +221,23 @@ def total_launches() -> int:
     return sum(_launches.values())
 
 
+def mode_launch_counts() -> dict:
+    """Per-mode per-family dispatch counts since process start:
+    ``{"interpret": {family: n}, "compiled": {family: n}}``."""
+    return {mode: dict(c) for mode, c in _mode_launches.items()}
+
+
+def compiled_launches() -> int:
+    """Total dispatches that went down the compiled (non-interpret) path —
+    the bench-side "did this workload really run compiled" probe."""
+    return sum(_mode_launches["compiled"].values())
+
+
 def reset_launches() -> None:
-    """Zero every per-family counter (bench/test isolation)."""
+    """Zero every per-family and per-mode counter (bench/test isolation)."""
     _launches.clear()
+    for c in _mode_launches.values():
+        c.clear()
 
 
 def launches_since(snapshot: dict) -> dict:

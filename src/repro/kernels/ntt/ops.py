@@ -3,17 +3,31 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels import config
+from repro.core.ntt import balanced_submodules, valid_submodules
+from repro.kernels import autotune, config
 
 from .kernel import ntt_pallas
 
 
 def default_submodules(N: int) -> int:
-    """CiFHER's default submodule count: R = ⁴√N·… → use R = √N (balanced)."""
-    R = 1
-    while R * R < N:
-        R *= 2
-    return R
+    """CiFHER's default submodule count R = √N (balanced; see
+    :func:`repro.core.ntt.balanced_submodules`)."""
+    return balanced_submodules(N)
+
+
+def _resolve(x, R, limbs_per_block):
+    """Fill unpinned knobs from the autotuned config cache (cold cache →
+    the historical defaults: R = √N, limbs_per_block = 4)."""
+    ell, N = x.shape[-2], x.shape[-1]
+    if R is None or limbs_per_block is None:
+        cfg = autotune.best_config("ntt", N, ell)
+        if limbs_per_block is None:
+            limbs_per_block = cfg.get("limbs_per_block")
+        if R is None:
+            R = cfg.get("R")
+            if not valid_submodules(N, R):  # untuned or stale cache entry
+                R = balanced_submodules(N)
+    return R, limbs_per_block
 
 
 def ntt_fwd(x, basis: tuple[int, ...], R: int | None = None,
@@ -21,24 +35,26 @@ def ntt_fwd(x, basis: tuple[int, ...], R: int | None = None,
     """Forward negacyclic NTT of (P, ℓ, N) u32 via the Pallas kernel.
 
     ``limbs_per_block`` batches that many limbs into one grid program
-    (rounded down to a divisor of ℓ; default 4) — small polynomials amortize
-    per-program overhead across limbs.  ``interpret=None`` resolves through
-    :mod:`repro.kernels.config` (``REPRO_KERNEL_MODE``).
+    (rounded down to a divisor of ℓ) — small polynomials amortize
+    per-program overhead across limbs.  Unpinned knobs (``R``,
+    ``limbs_per_block``) resolve through the autotuned config cache
+    (:func:`repro.kernels.autotune.best_config`); ``interpret=None``
+    resolves through :mod:`repro.kernels.config` (``REPRO_KERNEL_MODE``).
     """
-    R = R or default_submodules(x.shape[-1])
-    config.count_launch("ntt")
+    R, limbs_per_block = _resolve(x, R, limbs_per_block)
+    interp = config.resolve_interpret(interpret)
+    config.count_launch("ntt", interpret=interp)
     return ntt_pallas(x, R=R, basis=tuple(basis), forward=True,
-                      interpret=config.resolve_interpret(interpret),
-                      limbs_per_block=limbs_per_block)
+                      interpret=interp, limbs_per_block=limbs_per_block)
 
 
 def ntt_inv(x, basis: tuple[int, ...], R: int | None = None,
             interpret: bool | None = None, limbs_per_block: int | None = None):
-    R = R or default_submodules(x.shape[-1])
-    config.count_launch("ntt")
+    R, limbs_per_block = _resolve(x, R, limbs_per_block)
+    interp = config.resolve_interpret(interpret)
+    config.count_launch("ntt", interpret=interp)
     return ntt_pallas(x, R=R, basis=tuple(basis), forward=False,
-                      interpret=config.resolve_interpret(interpret),
-                      limbs_per_block=limbs_per_block)
+                      interpret=interp, limbs_per_block=limbs_per_block)
 
 
 def lower_tpu(x_shape, basis: tuple[int, ...], R: int, forward: bool = True,

@@ -1,0 +1,347 @@
+"""Autotuner + compile-mode plumbing tests (kernel config cache, wrapper
+fallback, per-mode counters, compiled-vs-interpret bit-exactness).
+
+The cache fixture isolates every test in a tmp-path JSON file so developer
+machines with a real ``~/.cache/repro-cifher/autotune.json`` see identical
+behavior to CI.  The compiled-vs-interpret tests run under
+``config.use_mode`` and therefore exercise whatever the backend resolves:
+on CPU the compile request falls back to interpret (with the one-time
+warning this file also pins down), on TPU/GPU the same test compares a real
+compiled execution against interpret — bit-exact either way, because modular
+arithmetic is exact.
+"""
+import json
+import sys
+import warnings
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))  # benchmarks/
+
+from repro.core import rns
+from repro.kernels import autotune, config
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache(tmp_path):
+    autotune.set_cache_path(tmp_path / "autotune.json")
+    yield
+    autotune.set_cache_path(None)
+
+
+def _rand(basis, N, seed=0, lead=()):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(np.stack(
+        [rng.integers(0, q, (*lead, N)).astype(np.uint32) for q in basis],
+        axis=-2))
+
+
+# ----------------------------------------------------------------------------
+# Config cache
+# ----------------------------------------------------------------------------
+
+def test_cache_round_trip(tmp_path):
+    path = tmp_path / "autotune.json"
+    entry = {"config": {"tile": 512, "block_b": 2}, "us": 123.0, "swept": 9}
+    key = autotune.record("bconv", 4096, 8, entry)
+    assert path.exists()
+    before = autotune.entries()
+    # drop all in-memory state, reload from disk
+    autotune.set_cache_path(path)
+    assert autotune.entries() == before
+    assert key in autotune.entries()
+    # the stored doc is plain JSON with a version stamp
+    doc = json.loads(path.read_text())
+    assert doc["version"] == autotune.CACHE_VERSION
+    assert doc["entries"][key]["config"] == {"tile": 512, "block_b": 2}
+
+
+def test_corrupt_cache_degrades_to_defaults(tmp_path):
+    path = tmp_path / "autotune.json"
+    path.write_text("{not json")
+    autotune.set_cache_path(path)
+    assert autotune.best_config("ntt", 4096, 8) == autotune.DEFAULTS["ntt"]
+
+
+def test_cold_cache_returns_hardcoded_defaults():
+    for family, want in autotune.DEFAULTS.items():
+        got = autotune.best_config(family, 4096, 8)
+        assert got == want, family
+    # every lookup is logged as default-sourced for bench provenance
+    assert all(v["source"] == "default"
+               for v in autotune.resolved_configs().values())
+    with pytest.raises(ValueError):
+        autotune.best_config("nope", 4096, 8)
+
+
+def test_tuned_entry_overrides_default_for_its_key_only():
+    autotune.record("eltwise", 4096, 8,
+                    {"config": {"tile": 1024, "limbs_per_block": 2}})
+    assert autotune.best_config("eltwise", 4096, 8) == {
+        "tile": 1024, "limbs_per_block": 2}
+    # a different shape still falls back to the defaults
+    assert autotune.best_config("eltwise", 2048, 8) == \
+        autotune.DEFAULTS["eltwise"]
+    assert autotune.resolved_configs()[
+        autotune.cache_key("eltwise", 4096, 8)]["source"] == "cache"
+
+
+# ----------------------------------------------------------------------------
+# Deterministic sweep grids
+# ----------------------------------------------------------------------------
+
+def test_candidate_grids_deterministic_and_valid():
+    for family in autotune.FAMILIES:
+        a = autotune.candidates(family, 4096, 8)
+        b = autotune.candidates(family, 4096, 8)
+        assert a == b and len(a) >= 2, family
+        assert len({json.dumps(c, sort_keys=True) for c in a}) == len(a)
+    for c in autotune.candidates("ntt", 4096, 8):
+        R = c["R"]
+        assert R >= 2 and (R & (R - 1)) == 0 and 4096 // R >= 2
+    for fam in ("bconv", "eltwise"):
+        for c in autotune.candidates(fam, 4096, 8):
+            assert 4096 % c["tile"] == 0, (fam, c)
+
+
+def test_autotune_sweep_records_winner_from_grid():
+    entry = autotune.autotune("automorphism", 256, 2, reps=1)
+    assert entry["config"] in autotune.candidates("automorphism", 256, 2)
+    assert entry["swept"] == len(autotune.candidates("automorphism", 256, 2))
+    assert entry["mode"] in ("interpret", "compiled")
+    assert entry["backend"] == config.backend()
+    # the wrapper now resolves this exact entry
+    assert autotune.best_config("automorphism", 256, 2) == entry["config"]
+    # and it survives a reload
+    autotune.set_cache_path(autotune.cache_path())
+    assert autotune.best_config("automorphism", 256, 2) == entry["config"]
+
+
+# ----------------------------------------------------------------------------
+# Wrapper integration
+# ----------------------------------------------------------------------------
+
+def test_ntt_wrapper_cold_cache_matches_pinned_defaults():
+    from repro.kernels.ntt import ops as ntt_ops, ref as ntt_ref
+    N, ell = 256, 4
+    basis = tuple(rns.gen_ntt_primes(ell, N))
+    x = _rand(basis, N, lead=(1,))
+    want = ntt_ref.ntt_ref(np.asarray(x), basis)
+    cold = np.asarray(ntt_ops.ntt_fwd(x, basis))
+    pinned = np.asarray(ntt_ops.ntt_fwd(
+        x, basis, R=16, limbs_per_block=4))  # √256 = 16, the default policy
+    assert np.array_equal(cold, want) and np.array_equal(pinned, want)
+    key = autotune.cache_key("ntt", N, ell)
+    assert autotune.resolved_configs()[key]["source"] == "default"
+
+
+def test_ntt_wrapper_uses_tuned_config_and_survives_stale_R():
+    from repro.kernels.ntt import ops as ntt_ops, ref as ntt_ref
+    N, ell = 256, 4
+    basis = tuple(rns.gen_ntt_primes(ell, N))
+    x = _rand(basis, N, seed=1, lead=(1,))
+    want = ntt_ref.ntt_ref(np.asarray(x), basis)
+    autotune.record("ntt", N, ell, {"config": {"limbs_per_block": 1, "R": 8}})
+    got = np.asarray(ntt_ops.ntt_fwd(x, basis))
+    assert np.array_equal(got, want)
+    key = autotune.cache_key("ntt", N, ell)
+    assert autotune.resolved_configs()[key]["source"] == "cache"
+    # a hand-edited/stale entry with an unusable R falls back to balanced √N
+    autotune.record("ntt", N, ell, {"config": {"limbs_per_block": 2, "R": 3}})
+    got = np.asarray(ntt_ops.ntt_fwd(x, basis))
+    assert np.array_equal(got, want)
+
+
+def test_bconv_wrapper_uses_tuned_tile_and_survives_stale_tile():
+    from repro.kernels.bconv import ops as bconv_ops, ref as bconv_ref
+    N, ell = 256, 3
+    primes = rns.gen_ntt_primes(2 * ell, N)
+    src, dst = tuple(primes[:ell]), tuple(primes[ell:])
+    x = _rand(src, N, seed=2)
+    want = bconv_ref.bconv_ref(np.asarray(x), src, dst)
+    autotune.record("bconv", N, ell, {"config": {"tile": 128, "block_b": 1}})
+    assert np.array_equal(np.asarray(bconv_ops.bconv(x, src, dst)), want)
+    # tile not dividing N (stale cache) must not crash the wrapper
+    autotune.record("bconv", N, ell, {"config": {"tile": 100, "block_b": 1}})
+    assert np.array_equal(np.asarray(bconv_ops.bconv(x, src, dst)), want)
+
+
+# ----------------------------------------------------------------------------
+# Compiled vs interpret (bit-exact, all four kernel families, N = 2^12)
+# ----------------------------------------------------------------------------
+
+N12 = 1 << 12
+
+
+def _both_modes(fn):
+    """Run ``fn()`` under interpret and under compile; return both arrays."""
+    with config.use_mode("interpret"):
+        a = np.asarray(fn())
+    with warnings.catch_warnings():
+        # on interpret-only backends the compile request warns (once) — the
+        # fallback itself is exactly what this parity run exercises
+        warnings.simplefilter("ignore", RuntimeWarning)
+        with config.use_mode("compile"):
+            b = np.asarray(fn())
+    return a, b
+
+
+def test_compiled_vs_interpret_ntt_bitexact():
+    from repro.kernels.ntt import ops as ntt_ops
+    basis = tuple(rns.gen_ntt_primes(2, N12))
+    x = _rand(basis, N12, seed=3, lead=(1,))
+    fwd_i, fwd_c = _both_modes(lambda: ntt_ops.ntt_fwd(x, basis))
+    assert np.array_equal(fwd_i, fwd_c)
+    inv_i, inv_c = _both_modes(
+        lambda: ntt_ops.ntt_inv(jnp.asarray(fwd_i), basis))
+    assert np.array_equal(inv_i, inv_c)
+    assert np.array_equal(inv_i, np.asarray(x))
+
+
+def test_compiled_vs_interpret_bconv_bitexact():
+    from repro.kernels.bconv import ops as bconv_ops
+    primes = rns.gen_ntt_primes(4, N12)
+    src, dst = tuple(primes[:2]), tuple(primes[2:])
+    x = _rand(src, N12, seed=4, lead=(2,))
+    a, b = _both_modes(lambda: bconv_ops.bconv(x, src, dst))
+    assert np.array_equal(a, b)
+
+
+def test_compiled_vs_interpret_automorphism_bitexact():
+    from repro.kernels.automorphism import ops as auto_ops
+    basis = tuple(rns.gen_ntt_primes(2, N12))
+    x = _rand(basis, N12, seed=5, lead=(2,))
+    a, b = _both_modes(lambda: auto_ops.apply_galois(x, N12, 5))
+    assert np.array_equal(a, b)
+    gs = (5, pow(5, 2, 2 * N12), 2 * N12 - 1)
+    a, b = _both_modes(
+        lambda: auto_ops.apply_galois_many(x[:1], N12, gs))
+    assert np.array_equal(a, b)
+
+
+def test_compiled_vs_interpret_eltwise_bitexact():
+    from repro.kernels.eltwise import ops as elt_ops
+    basis = tuple(rns.gen_ntt_primes(2, N12))
+    u = _rand(basis, N12, seed=6, lead=(2,))
+    v = _rand(basis, N12, seed=7, lead=(2,))
+    for op, arrays in (("mul", (u, v)), ("add", (u, v)),
+                       ("mac", (u, v, v, u))):
+        a, b = _both_modes(lambda: elt_ops.eltwise(op, basis, *arrays))
+        assert np.array_equal(a, b), op
+
+
+# ----------------------------------------------------------------------------
+# Mode plumbing: cached backend probe, one-time fallback warning, counters
+# ----------------------------------------------------------------------------
+
+def test_backend_probe_cached(monkeypatch):
+    first = config.backend()
+    assert first in ("cpu", "gpu", "tpu")
+    # once probed, the cached value is served without re-querying jax
+    import jax
+    monkeypatch.setattr(jax, "default_backend",
+                        lambda: (_ for _ in ()).throw(RuntimeError("probed")))
+    assert config.backend() == first
+
+
+def test_compile_fallback_warns_exactly_once():
+    if config.compile_supported():
+        pytest.skip("backend compiles Pallas — no fallback to warn about")
+    config.reset_compile_fallback_warning()
+    assert not config.compile_fallback_warned()
+    with config.use_mode("compile"):
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            assert config.resolve_interpret(None) is True
+            assert config.resolve_interpret(None) is True
+    fallback = [x for x in w if issubclass(x.category, RuntimeWarning)]
+    assert len(fallback) == 1
+    assert "falling back to interpret" in str(fallback[0].message)
+    assert config.compile_fallback_warned()
+    # an explicit interpret pin never warns, in any mode
+    config.reset_compile_fallback_warning()
+    with config.use_mode("compile"):
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            assert config.resolve_interpret(True) is True
+    assert not w
+
+
+def test_per_mode_launch_counters():
+    from repro.kernels.eltwise import ops as elt_ops
+    basis = tuple(rns.gen_ntt_primes(2, 256))
+    u = _rand(basis, 256, seed=8)
+    config.reset_launches()
+    with config.use_mode("interpret"):
+        elt_ops.eltwise("add", basis, u, u)
+    counts = config.mode_launch_counts()
+    assert counts["interpret"].get("eltwise") == 1
+    # resolved mode is what gets tallied: a compile request on an
+    # interpret-only backend still books under "interpret"
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        with config.use_mode("compile"):
+            elt_ops.eltwise("add", basis, u, u)
+    counts = config.mode_launch_counts()
+    booked = config.resolved_mode() if config.compile_supported() else None
+    if config.compile_supported():
+        assert counts["compiled"].get("eltwise") == 1, booked
+        assert config.compiled_launches() == 1
+    else:
+        assert counts["interpret"].get("eltwise") == 2
+        assert config.compiled_launches() == 0
+    config.reset_launches()
+    assert config.mode_launch_counts() == {"interpret": {}, "compiled": {}}
+    assert config.launch_counts() == {}
+
+
+# ----------------------------------------------------------------------------
+# Bench-gate tooling: baseline auto-discovery
+# ----------------------------------------------------------------------------
+
+def _write_bench(path, gate):
+    path.write_text(json.dumps(
+        {"bench": path.stem.replace("BENCH_", ""), "gate": gate}) + "\n")
+
+
+def test_check_bench_regression_discovery(tmp_path, capsys):
+    from benchmarks import check_bench_regression as cbr
+    base, cand = tmp_path / "base", tmp_path / "cand"
+    base.mkdir(), cand.mkdir()
+    gate = {"mode": "interpret", "backend": "cpu", "ok": True, "count": 5}
+    _write_bench(base / "BENCH_a.json", gate)
+    _write_bench(base / "BENCH_b.json", gate)
+    # 1) candidate missing for a committed baseline -> hard failure
+    _write_bench(cand / "BENCH_a.json", gate)
+    rc = cbr.main(["--candidate-dir", str(cand), "--baseline-dir", str(base)])
+    assert rc == 1
+    assert "BENCH_b.json" in capsys.readouterr().err
+    # 2) both present and clean -> pass
+    _write_bench(cand / "BENCH_b.json", gate)
+    assert cbr.main(["--candidate-dir", str(cand),
+                     "--baseline-dir", str(base)]) == 0
+    # 3) mode string drift -> failure (modes are never conflated)
+    _write_bench(cand / "BENCH_b.json", {**gate, "mode": "compiled"})
+    rc = cbr.main(["--candidate-dir", str(cand), "--baseline-dir", str(base)])
+    assert rc == 1
+    assert "different execution environment" in capsys.readouterr().err
+    # 4) numeric growth -> failure; numeric improvement -> pass
+    _write_bench(cand / "BENCH_b.json", {**gate, "count": 6})
+    assert cbr.main(["--candidate-dir", str(cand),
+                     "--baseline-dir", str(base)]) == 1
+    capsys.readouterr()
+    _write_bench(cand / "BENCH_b.json", {**gate, "count": 4})
+    assert cbr.main(["--candidate-dir", str(cand),
+                     "--baseline-dir", str(base)]) == 0
+    # 5) no baselines at all -> failure, not a silent pass
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    capsys.readouterr()
+    assert cbr.main(["--candidate-dir", str(cand),
+                     "--baseline-dir", str(empty)]) == 1
+    # 6) explicit pairing still works for subset gates
+    assert cbr.main(["--baseline", str(base / "BENCH_a.json"),
+                     "--candidate", str(cand / "BENCH_a.json")]) == 0
