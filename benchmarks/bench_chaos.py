@@ -205,7 +205,16 @@ def staging_scenario(p, N, L):
     }
 
 
-def run(reps: int, N: int, L: int, rates) -> dict:
+def hang_sweep(N: int, L: int, rates) -> dict:
+    """Watchdog-bounded engines under injected hang faults, one run per
+    rate (see :func:`benchmarks.bench_recovery.hang_scenario` — prewarmed
+    batch shapes, deadline-bounded dispatch, typed ``hung`` escalation)."""
+    from benchmarks import bench_recovery as br
+    p, keysets = br._setup(N, L)
+    return {str(r): br.hang_scenario(p, keysets, rate=r) for r in rates}
+
+
+def run(reps: int, N: int, L: int, rates, hang_rates=()) -> dict:
     p, store = _setup(N, L)
 
     launch = {}
@@ -277,6 +286,25 @@ def run(reps: int, N: int, L: int, rates) -> dict:
             "wrong_answers_total": wrong_total,
         },
     }
+    if hang_rates:
+        hangs = hang_sweep(N, L, hang_rates)
+        r0 = str(min(hang_rates))
+        out["hangs"] = hangs
+        out["gate"].update({
+            # hang invariants hold at EVERY swept rate; only the lowest
+            # rate carries a goodput bound (high rates sag by design)
+            "hang_zero_wrong_answers": bool(all(
+                h["wrong_answers"] == 0 for h in hangs.values())),
+            "hang_all_requests_terminal": bool(all(
+                h["all_terminal"] for h in hangs.values())),
+            "hang_goodput_lowest_rate_ge_95pct":
+                bool(hangs[r0]["goodput"] >= 0.95),
+            # hang_scenario scripts one guaranteed fire at the first
+            # launch, so this is never vacuous
+            "watchdog_detected_hangs": bool(all(
+                h["hangs_fired"] >= 1 and h["hung_dispatches"] >= 1
+                for h in hangs.values())),
+        })
     return out
 
 
@@ -290,9 +318,13 @@ def main(argv=None) -> dict:
     ap.add_argument("--rates", type=float, nargs="+", default=[0.01, 0.05],
                     help="per-launch fault rates (nightly sweeps pass "
                          "higher rates)")
+    ap.add_argument("--hang-rates", type=float, nargs="*", default=[],
+                    help="per-launch HANG rates swept under a dispatch "
+                         "watchdog (nightly passes 0.01 0.05); empty = "
+                         "skip the hang sweep")
     args = ap.parse_args(argv)
     res = run(reps=2 if args.quick else 3, N=args.N, L=args.L,
-              rates=tuple(args.rates))
+              rates=tuple(args.rates), hang_rates=tuple(args.hang_rates))
     args.out.write_text(json.dumps(res, indent=1, sort_keys=True) + "\n")
     print(json.dumps(res["gate"], indent=1))
     print(f"wrote {args.out}")

@@ -1,0 +1,385 @@
+"""Crash-recovery benchmark: durable journal, deterministic replay, and the
+dispatch watchdog (EXPERIMENTS.md §Chaos — recovery/watchdog gates).
+
+Three measured guarantees, gated in ``BENCH_recovery.json``:
+
+  * **bit-identical recovery** — an engine killed at a step boundary is
+    rebuilt from (newest committed snapshot + journal tail replay) and must
+    produce byte-for-byte the ciphertext results and the same terminal
+    statuses as the uninterrupted reference run.  Deterministic: logical
+    clock, restorable request-ID counter, restorable retry-jitter stream,
+    write-ahead step records;
+  * **journal overhead ≤5 %** — the durability tax on the fault-free
+    serving path (per-record CRC framing + flush) measured min-of-reps,
+    interleaved A/B against an identical engine without a journal;
+  * **watchdog goodput under hangs** — with hang faults injected at 1 % of
+    kernel launches, the watchdog-bounded engine (deadline → abort token →
+    retry; repeated hangs escalate to a typed ``hung`` quarantine) must
+    keep goodput ≥ 0.95 with ZERO wrong answers — every "ok" decrypts to
+    the plaintext reference.
+
+Crash-loop mode (nightly CI) replays the kill/recover cycle repeatedly with
+derived random seeds and kill points, persisting journals/snapshots under
+``--journal-dir`` so a failing cycle leaves its evidence for artifact
+upload::
+
+    PYTHONPATH=src python -m benchmarks.bench_recovery [--quick] [--out P]
+    PYTHONPATH=src python -m benchmarks.bench_recovery \
+        --cycles 5 --seed 123 --journal-dir /tmp/crashloop
+"""
+import argparse
+import json
+import shutil
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import encoding as enc
+from repro.core import keys as K
+from repro.core import params as prm
+from repro.runtime import faults
+from repro.serve import (DispatchWatchdog, FheServeEngine, LogicalClock,
+                         SnapshotStore, TenantKeyStore, recover,
+                         set_rid_counter, standard_reference,
+                         standard_request)
+
+DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_recovery.json"
+
+TENANTS = ("tenant0", "tenant1")
+WAVE = 8
+TOL = 1e-2
+TERMINAL = frozenset({"ok", "rejected", "timeout", "failed", "shed"})
+
+
+def _setup(N: int, L: int):
+    p = prm.make_params(N=N, L=L, K=2, dnum=2)
+    keysets = {t: K.keygen(p, rotations=(1,), seed=i)
+               for i, t in enumerate(TENANTS)}
+    return p, keysets
+
+
+def _store(keysets):
+    store = TenantKeyStore(max_resident=len(TENANTS))
+    for t, ks in keysets.items():
+        store.register(t, ks)
+    return store
+
+
+def _make_wave(p, store, seeds):
+    out = []
+    for i, seed in enumerate(seeds):
+        t = TENANTS[i % len(TENANTS)]
+        req, zs = standard_request(p, store.keyset(t), t, seed=seed)
+        out.append((req, zs))
+    return out
+
+
+def _ct_bytes(ct):
+    return (np.asarray(ct.a.data, np.uint32).tobytes(),
+            np.asarray(ct.b.data, np.uint32).tobytes())
+
+
+def _outcome(eng):
+    """(results-by-rid as raw bytes, status-by-rid) for bit-exact compare."""
+    bits = {r.rid: {k: _ct_bytes(v) for k, v in r.result().items()}
+            for r in eng.completed}
+    statuses = {r.rid: r.status for r in eng.completed + eng.failed}
+    return bits, statuses
+
+
+def _verify_decrypts(p, store, served):
+    wrong = 0
+    for req, (z1, z2) in served:
+        ks = store.keyset(req.tenant)
+        out = req.result()["out"]
+        got = enc.decode(K.decrypt(out, ks.sk), out.scale, out.basis, p.N,
+                         len(z1))
+        if np.max(np.abs(got.real - standard_reference(z1, z2))) >= TOL:
+            wrong += 1
+    return wrong
+
+
+# ----------------------------------------------------------------------------
+# Scenario 1: kill/recover, bit-identical
+# ----------------------------------------------------------------------------
+
+def recovery_scenario(p, keysets, workdir: Path, *, kill_after: int,
+                      snap_after: int | None, seeds, rid_base: int) -> dict:
+    """One kill/recover cycle vs an uninterrupted reference run."""
+    # reference: same seeds, same rids, logical clock, no journal
+    set_rid_counter(rid_base)
+    store = _store(keysets)
+    ref = FheServeEngine(store, max_batch=WAVE, clock=LogicalClock(),
+                         sleeper=lambda d: None)
+    for req, _ in _make_wave(p, store, seeds):
+        assert ref.submit(req)
+    ref.run_until_drained()
+    ref_bits, ref_statuses = _outcome(ref)
+
+    # crashing run: journal + periodic snapshot, killed mid-flight
+    jdir, sdir = str(workdir / "journal"), str(workdir / "snapshots")
+    for d in (jdir, sdir):
+        shutil.rmtree(d, ignore_errors=True)
+    set_rid_counter(rid_base)
+    store = _store(keysets)
+    eng = FheServeEngine(store, max_batch=WAVE, journal=jdir,
+                         sleeper=lambda d: None)
+    snaps = SnapshotStore(sdir)
+    for req, _ in _make_wave(p, store, seeds):
+        assert eng.submit(req)
+    for step in range(1, kill_after + 1):
+        eng.step()
+        if snap_after is not None and step == snap_after:
+            eng.snapshot(snaps)
+    eng.journal.close()                           # the "crash"
+    del eng
+
+    rec, report = recover(sdir, jdir, _store(keysets),
+                          sleeper=lambda d: None)
+    rec.run_until_drained()
+    got_bits, got_statuses = _outcome(rec)
+    return {
+        "kill_after": kill_after,
+        "snap_after": snap_after,
+        "bit_identical": got_bits == ref_bits,
+        "statuses_match": got_statuses == ref_statuses,
+        "served": len(got_bits),
+        "snapshot_used": report["snapshot"] is not None,
+        "tail_records_replayed": report["records"],
+        "terminals_verified": report["terminals_verified"],
+    }
+
+
+# ----------------------------------------------------------------------------
+# Scenario 2: journal overhead on the fault-free path
+# ----------------------------------------------------------------------------
+
+def journal_overhead(p, keysets, workdir: Path, reps: int) -> dict:
+    """min-of-reps wall-clock for identical fault-free waves, with and
+    without a journal (interleaved A/B so machine drift hits both)."""
+    jdir = str(workdir / "overhead_journal")
+    shutil.rmtree(jdir, ignore_errors=True)
+    store = _store(keysets)
+    engines = {
+        "plain": FheServeEngine(store, max_batch=WAVE, clock=LogicalClock(),
+                                sleeper=lambda d: None),
+        "journal": FheServeEngine(store, max_batch=WAVE, journal=jdir,
+                                  sleeper=lambda d: None),
+    }
+    for eng in engines.values():                  # warm: compile + stage
+        for req, _ in _make_wave(p, store, range(3000, 3000 + WAVE)):
+            assert eng.submit(req)
+        eng.run_until_drained()
+    times = {"plain": [], "journal": []}
+    for rep in range(reps):
+        base = 3100 + WAVE * rep
+        for mode, eng in engines.items():
+            wave = _make_wave(p, store, range(base, base + WAVE))
+            t0 = time.perf_counter()
+            for req, _ in wave:
+                assert eng.submit(req)
+            eng.run_until_drained()
+            times[mode].append(time.perf_counter() - t0)
+    frac = min(times["journal"]) / min(times["plain"]) - 1.0
+    return {
+        "plain_s": min(times["plain"]),
+        "journal_s": min(times["journal"]),
+        "overhead_frac": frac,
+        "records_appended": engines["journal"].journal.appended,
+        "bytes_written": engines["journal"].journal.bytes_written,
+    }
+
+
+# ----------------------------------------------------------------------------
+# Scenario 3: hangs at 1 % under the watchdog
+# ----------------------------------------------------------------------------
+
+def hang_scenario(p, keysets, *, rate: float, waves: int = 2,
+                  deadline: float = 1.0) -> dict:
+    """Inject hang faults at ``rate`` per kernel launch; the watchdog must
+    keep goodput high with zero wrong answers."""
+    store = _store(keysets)
+    # prewarm every batch shape the run (and its escalation splits) can
+    # dispatch — a cold XLA compile inside a bounded dispatch would trip
+    # the deadline and read as a hang
+    warm = FheServeEngine(store, max_batch=WAVE, sleeper=lambda d: None)
+    seed = 4000
+    for nb in (WAVE, WAVE // 2, 2, 1):
+        for req, _ in _make_wave(p, store, range(seed, seed + nb)):
+            assert warm.submit(req)
+        warm.run_until_drained()
+        seed += nb
+
+    wd = DispatchWatchdog(deadline=deadline, grace=0.5, escalate_after=2)
+    eng = FheServeEngine(store, max_batch=WAVE, watchdog=wd,
+                         sleeper=lambda d: None)
+    # rate draws per launch PLUS one scripted fire at the first launch —
+    # batched dispatch makes launch events sparse enough that a low rate
+    # alone can fire zero times, which would leave the watchdog untested
+    plan = faults.FaultPlan.from_dict(
+        {"seed": 29, "specs": [{"site": "hang", "rate": rate, "at": [0],
+                                "duration": 30.0}]})
+    reqs = []
+    for w in range(waves):
+        reqs.extend(_make_wave(p, store, range(4200 + WAVE * w,
+                                               4200 + WAVE * (w + 1))))
+    with faults.inject(plan) as inj:
+        for req, _ in reqs:
+            assert eng.submit(req)
+        eng.run_until_drained()
+    ok = [(r, z) for r, z in reqs if r.status == "ok"]
+    wrong = _verify_decrypts(p, store, ok)
+    m = eng.metrics
+    return {
+        "rate": rate,
+        "submitted": len(reqs),
+        "served": len(ok),
+        "goodput": len(ok) / len(reqs),
+        "wrong_answers": wrong,
+        "all_terminal": all(r.done and r.status in TERMINAL
+                            for r, _ in reqs),
+        "statuses": [r.status for r, _ in reqs],
+        "hangs_fired": int(inj.fired.get("hang", 0)),
+        "hung_dispatches": m.hung_dispatches,
+        "hang_escalations": m.hang_escalations,
+        "watchdog_timeouts": wd.timeouts,
+        "slow_dispatches": wd.slow_dispatches,
+    }
+
+
+# ----------------------------------------------------------------------------
+# Crash-loop mode (nightly): repeated kill/recover with derived seeds
+# ----------------------------------------------------------------------------
+
+def crash_loop(p, keysets, root: Path, cycles: int, seed: int) -> dict:
+    results = []
+    for cycle in range(cycles):
+        rng = np.random.default_rng([seed, cycle])
+        kill_after = int(rng.integers(1, 6))
+        snap_after = (None if kill_after == 1 or rng.random() < 0.3
+                      else int(rng.integers(1, kill_after)))
+        seeds = [int(s) for s in rng.integers(0, 2**31, size=WAVE)]
+        workdir = root / f"cycle_{cycle:03d}"
+        workdir.mkdir(parents=True, exist_ok=True)
+        res = recovery_scenario(p, keysets, workdir,
+                                kill_after=kill_after,
+                                snap_after=snap_after, seeds=seeds,
+                                rid_base=1_000_000 + 10_000 * cycle)
+        ok = res["bit_identical"] and res["statuses_match"]
+        print(f"cycle {cycle}: kill_after={kill_after} "
+              f"snap_after={snap_after} -> "
+              f"{'OK' if ok else 'MISMATCH'} ({res})")
+        results.append(res)
+        if ok:
+            # keep disk bounded: only failing cycles leave artifacts
+            shutil.rmtree(workdir, ignore_errors=True)
+    failed = [r for r in results
+              if not (r["bit_identical"] and r["statuses_match"])]
+    return {"cycles": cycles, "seed": seed, "failed": len(failed),
+            "results": results}
+
+
+# ----------------------------------------------------------------------------
+# Aggregate run + gate
+# ----------------------------------------------------------------------------
+
+def run(reps: int, N: int, L: int, hang_rate: float) -> dict:
+    p, keysets = _setup(N, L)
+    tmp = Path(tempfile.mkdtemp(prefix="bench_recovery_"))
+    try:
+        recoveries = [
+            recovery_scenario(p, keysets, tmp / "r1", kill_after=2,
+                              snap_after=1, seeds=range(100, 100 + WAVE),
+                              rid_base=100_000),
+            recovery_scenario(p, keysets, tmp / "r2", kill_after=3,
+                              snap_after=None, seeds=range(200, 200 + WAVE),
+                              rid_base=110_000),
+        ]
+        overhead = journal_overhead(p, keysets, tmp, reps)
+        hang = hang_scenario(p, keysets, rate=hang_rate)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    from benchmarks.bench_env import gate_env, run_env
+    return {
+        "bench": "recovery",
+        "params": {"N": p.N, "L": p.L, "dnum": p.dnum,
+                   "tenants": len(TENANTS), "wave": WAVE, "reps": reps,
+                   "hang_rate": hang_rate},
+        "env": run_env(),
+        "recovery": recoveries,
+        "journal_overhead": overhead,
+        "hang": hang,
+        "gate": {
+            **gate_env(),
+            "recovered_bit_identical": bool(
+                all(r["bit_identical"] for r in recoveries)),
+            "recovered_statuses_match": bool(
+                all(r["statuses_match"] for r in recoveries)),
+            "snapshot_plus_tail_covered": bool(
+                recoveries[0]["snapshot_used"]
+                and recoveries[0]["terminals_verified"] >= 0),
+            "journal_overhead_le_5pct": bool(
+                overhead["overhead_frac"] <= 0.05),
+            "hang_goodput_ge_95pct": bool(hang["goodput"] >= 0.95),
+            "hang_zero_wrong_answers": bool(hang["wrong_answers"] == 0),
+            "hang_all_requests_terminal": bool(hang["all_terminal"]),
+            "watchdog_detected_hangs": bool(
+                hang["hangs_fired"] >= 1
+                and hang["hung_dispatches"] >= 1),
+            "wrong_answers_total": hang["wrong_answers"],
+        },
+    }
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer overhead reps (CI); default 3")
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    ap.add_argument("--N", type=int, default=1 << 9)
+    ap.add_argument("--L", type=int, default=4)
+    ap.add_argument("--hang-rate", type=float, default=0.01)
+    ap.add_argument("--cycles", type=int, default=0,
+                    help="crash-loop mode: run this many kill/recover "
+                         "cycles with derived random seeds instead of the "
+                         "gated bench")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="crash-loop base seed")
+    ap.add_argument("--journal-dir", type=Path, default=None,
+                    help="crash-loop artifact root (failing cycles leave "
+                         "their journal/snapshots here)")
+    args = ap.parse_args(argv)
+
+    if args.cycles > 0:
+        p, keysets = _setup(args.N, args.L)
+        root = args.journal_dir or Path(tempfile.mkdtemp(
+            prefix="crash_loop_"))
+        res = crash_loop(p, keysets, root, args.cycles, args.seed)
+        print(json.dumps({k: v for k, v in res.items() if k != "results"},
+                         indent=1))
+        if res["failed"]:
+            raise RuntimeError(
+                f"{res['failed']}/{res['cycles']} crash-loop cycles "
+                f"diverged — artifacts under {root}")
+        return res
+
+    res = run(reps=2 if args.quick else 3, N=args.N, L=args.L,
+              hang_rate=args.hang_rate)
+    args.out.write_text(json.dumps(res, indent=1, sort_keys=True) + "\n")
+    print(json.dumps(res["gate"], indent=1))
+    print(f"wrote {args.out}")
+    failed = [k for k, v in res["gate"].items()
+              if isinstance(v, bool) and v is not True]
+    if failed:
+        raise RuntimeError(f"recovery gate invariants failed: {failed}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -52,6 +52,11 @@ def main() -> None:
         sections.append(("FHE serving under fault injection (chaos)",
                          lambda: bench_chaos.main(
                              ["--quick", "--out", "/tmp/BENCH_chaos.json"])))
+        from benchmarks import bench_recovery
+        sections.append(("Crash-safe serving: recovery + watchdog gates",
+                         lambda: bench_recovery.main(
+                             ["--quick", "--out",
+                              "/tmp/BENCH_recovery.json"])))
 
     for title, fn in sections:
         print(f"\n### {title}")

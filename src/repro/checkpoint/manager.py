@@ -10,7 +10,11 @@ Layout:
 Fault-tolerance contract:
   * save is atomic (tmp dir + rename; COMMITTED last) — a crash mid-save can
     never corrupt the latest good checkpoint;
-  * restore picks the newest COMMITTED step and verifies content hashes;
+  * restore picks the newest COMMITTED step and verifies content hashes; a
+    step that fails verification (bit rot, torn shard, tree drift) FALLS
+    BACK to the next older committed step instead of dying, unless the
+    caller pinned an explicit ``step=`` (a pinned restore must never load
+    a different step silently);
   * restore reshapes to the *current* mesh (elastic: params are saved as full
     logical arrays per leaf here — multi-host deployments save per-shard
     slices keyed by shard index and the loader reassembles/reslices).
@@ -22,6 +26,7 @@ import json
 import os
 import shutil
 import threading
+import zipfile
 
 import jax
 import jax.numpy as jnp
@@ -108,14 +113,39 @@ class CheckpointManager:
         return steps[-1] if steps else None
 
     def restore(self, template, step: int | None = None, shardings=None,
-                verify: bool = True):
+                verify: bool = True, fallback: bool = True):
         """Restore into the structure of ``template`` (shapes must match);
         ``shardings``: optional matching tree of NamedShardings for elastic
-        placement onto the current mesh."""
-        step = step if step is not None else self.latest_step()
-        if step is None:
+        placement onto the current mesh.
+
+        With ``fallback`` (default), a step whose content fails
+        verification — hash mismatch, unreadable shard/manifest, tree or
+        shape drift — is skipped and the next older committed step is
+        tried, so one rotted checkpoint degrades recovery by one save
+        interval instead of killing it.  An explicit ``step=`` disables
+        the fallback: a pinned restore either loads THAT step or raises.
+        """
+        pinned = step is not None
+        candidates = [step] if pinned else list(reversed(self.list_steps()))
+        if not candidates:
             raise FileNotFoundError(f"no committed checkpoints in {self.dir}")
+        errors = []
+        for s in candidates:
+            try:
+                return self._restore_step(template, s, shardings, verify), s
+            except (AssertionError, OSError, KeyError, ValueError,
+                    zipfile.BadZipFile) as e:
+                if pinned or not fallback:
+                    raise
+                errors.append(f"step {s}: {e}")
+        raise FileNotFoundError(
+            "no committed checkpoint in "
+            f"{self.dir} passed verification: {'; '.join(errors)}")
+
+    def _restore_step(self, template, step: int, shardings, verify: bool):
         d = os.path.join(self.dir, f"step_{step:09d}")
+        if not os.path.exists(os.path.join(d, "COMMITTED")):
+            raise FileNotFoundError(f"step {step} has no COMMITTED marker")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
         data = np.load(os.path.join(d, "shard_0.npz"))
@@ -135,4 +165,4 @@ class CheckpointManager:
                 out.append(jax.device_put(a, shd))
             else:
                 out.append(jnp.asarray(a))
-        return treedef.unflatten(out), step
+        return treedef.unflatten(out)

@@ -22,6 +22,14 @@ accelerator faults:
   corruption the ``REPRO_GUARDS=full`` residue scan is guaranteed to catch.
   In-range corruption needs redundancy (e.g. replicated evaluation) that is
   out of scope here; see README §Robustness.
+* **hung and delayed launches** — a dispatch that stalls at the launch
+  boundary instead of aborting.  ``hang`` never completes (it unwinds as
+  :class:`HungLaunch` when a :class:`repro.serve.resilience.
+  DispatchWatchdog` aborts its :class:`DispatchToken`, or when its scripted
+  ``duration`` elapses unwatched); ``delay`` completes after ``duration``
+  unless aborted first.  Both stall BEFORE the launch counter moves and
+  before any result scatter, so abandoning a stalled dispatch is as safe as
+  retrying an aborted one.
 
 Determinism: each :class:`FaultSpec` owns an independent
 ``np.random.default_rng([seed, spec_index])`` stream and consumes exactly one
@@ -39,13 +47,17 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 
 import numpy as np
 
 from repro.core import const_cache
 from repro.kernels import config as kconfig
 
-SITES = ("launch", "stage", "bitflip")
+SITES = ("launch", "stage", "bitflip", "hang", "delay")
+
+# sites that observe kernel-launch events and honor the per-family filter
+LAUNCH_SITES = ("launch", "hang", "delay")
 
 
 class FaultError(Exception):
@@ -60,32 +72,139 @@ class StagingFault(FaultError):
     """A host→device constant/evk staging transfer failed."""
 
 
+class HungLaunch(FaultError):
+    """A dispatch stalled at the launch boundary past its bound.  Raised by
+    the hung worker when its :class:`DispatchToken` is aborted (watchdog
+    timeout) or its scripted duration elapses — never with results
+    half-scattered, so a retry is always safe."""
+
+
+class DispatchToken:
+    """Cancellation token for one bounded dispatch.
+
+    The watchdog (:class:`repro.serve.resilience.DispatchWatchdog`)
+    creates one per dispatch via :func:`begin_dispatch`; injected
+    ``hang``/``delay`` waits block on it instead of bare sleeps, so a
+    watchdog timeout UNBLOCKS the stalled worker thread, which then
+    unwinds through :class:`HungLaunch` *before* any result scatter —
+    an abandoned dispatch can never write back stale results.
+
+    :meth:`commit` closes the remaining race for *real* (non-injected)
+    slow dispatches: the batcher publishes results only inside the commit
+    gate, which shares a lock with :meth:`abort`.  Either the abort lands
+    first (the worker discards its results and unwinds as
+    :class:`HungLaunch`) or the publication completes first (the watchdog
+    finds the worker finished within its grace window and reports a slow
+    dispatch, not a hang) — results are never both published and retried."""
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._lock = threading.Lock()
+        self.aborted = False
+
+    def abort(self) -> None:
+        with self._lock:
+            self.aborted = True
+            self._event.set()
+
+    def wait(self, timeout: float | None) -> bool:
+        """Block up to ``timeout`` seconds; True if aborted meanwhile."""
+        self._event.wait(timeout)
+        return self.aborted
+
+    def commit(self):
+        """Context manager gating result publication against :meth:`abort`;
+        raises :class:`HungLaunch` when the dispatch was already abandoned."""
+        return _CommitGate(self)
+
+
+class _CommitGate:
+    def __init__(self, token: DispatchToken):
+        self._token = token
+
+    def __enter__(self):
+        self._token._lock.acquire()
+        if self._token.aborted:
+            self._token._lock.release()
+            raise HungLaunch(
+                "dispatch aborted by watchdog before result publication")
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self._token._lock.release()
+        return False
+
+
+_current_token: DispatchToken | None = None
+_thread_tokens = threading.local()
+
+
+def begin_dispatch() -> DispatchToken:
+    """Install a fresh cancellation token for the dispatch about to run
+    (main thread, before the worker starts)."""
+    global _current_token
+    _current_token = DispatchToken()
+    return _current_token
+
+
+def end_dispatch() -> None:
+    global _current_token
+    _current_token = None
+
+
+def bind_dispatch_token(token: DispatchToken | None) -> None:
+    """Pin a token to THIS thread (the watchdog worker calls this first).
+
+    Thread-local binding means an abandoned worker from a previous attempt
+    keeps seeing its own (aborted) token — never the fresh token of the
+    retry that replaced it — so its late results always hit a closed
+    commit gate."""
+    _thread_tokens.token = token
+
+
+def current_dispatch_token() -> DispatchToken | None:
+    tok = getattr(_thread_tokens, "token", None)
+    return tok if tok is not None else _current_token
+
+
 @dataclasses.dataclass(frozen=True)
 class FaultSpec:
     """One fault source in a plan.
 
-    ``site``      — "launch" (kernel dispatch), "stage" (constant/evk
-                    upload), or "bitflip" (ciphertext residue corruption;
-                    consulted by the serving engine per produced result).
+    ``site``      — "launch" (kernel dispatch aborts), "stage"
+                    (constant/evk upload), "bitflip" (ciphertext residue
+                    corruption; consulted by the serving engine per
+                    produced result), "hang" (dispatch stalls at the
+                    launch boundary until a watchdog aborts it or
+                    ``duration`` elapses — then aborts, never completes),
+                    or "delay" (dispatch stalls ``duration`` seconds,
+                    then proceeds normally).
     ``rate``      — per-event firing probability (seeded, deterministic).
-    ``family``    — for "launch": restrict to one kernel family
-                    ("ntt", "bconv", "eltwise", "automorphism", "auto_ks");
-                    None hits every family.
+    ``family``    — for launch-boundary sites ("launch"/"hang"/"delay"):
+                    restrict to one kernel family ("ntt", "bconv",
+                    "eltwise", "automorphism", "auto_ks"); None hits every
+                    family.
     ``at``        — scripted firings: 0-based event indices (per site) that
                     fire regardless of ``rate`` — exact-replay scenarios.
     ``max_fires`` — stop firing after this many hits (None = unbounded).
+    ``duration``  — "hang": seconds a stall blocks when NO watchdog aborts
+                    it first (the unwatched-engine worst case; keep small
+                    in tests).  "delay": seconds the slow launch takes.
     """
     site: str
     rate: float = 0.0
     family: str | None = None
     at: tuple[int, ...] = ()
     max_fires: int | None = None
+    duration: float = 0.25
 
     def __post_init__(self):
         if self.site not in SITES:
             raise ValueError(f"unknown fault site {self.site!r} — one of {SITES}")
         if not (0.0 <= self.rate <= 1.0):
             raise ValueError(f"fault rate {self.rate} outside [0, 1]")
+        if self.duration < 0.0:
+            raise ValueError(f"fault duration {self.duration} < 0")
 
 
 class FaultPlan:
@@ -125,21 +244,60 @@ class FaultInjector:
         self._rngs = [np.random.default_rng([plan.seed, i])
                       for i in range(len(plan.specs))]
         self._spec_fired = [0] * len(plan.specs)
+        self._spec_draws = [0] * len(plan.specs)     # rng stream positions
         self.events: collections.Counter = collections.Counter()
         self.fired: collections.Counter = collections.Counter()
         self.fired_log: list[tuple[str, int]] = []   # (site, event index)
 
+    # -- state round-trip (crash-safe chaos: repro.serve.recovery) -------------
+
+    def state_dict(self) -> dict:
+        """Replayable position of this injector: event counters, per-spec
+        fired counts, and per-spec RNG *draw* counts (streams are
+        counter-based, so a position is just how many draws happened)."""
+        return {
+            "plan": self.plan.to_dict(),
+            "events": dict(self.events),
+            "fired": dict(self.fired),
+            "spec_fired": list(self._spec_fired),
+            "spec_draws": list(self._spec_draws),
+            "fired_log": [list(x) for x in self.fired_log],
+        }
+
+    def load_state(self, state: dict) -> None:
+        """Fast-forward to a saved position (plan must match): rebuild each
+        spec stream and burn its recorded draw count, so the next event
+        consumes exactly the draw the uninterrupted run would have."""
+        import json
+        # canonicalize through JSON: a saved plan crossed a JSON round-trip,
+        # so its tuples (spec lists, ``at`` indices) come back as lists
+        canon = lambda d: json.loads(json.dumps(d))
+        if canon(state["plan"]) != canon(self.plan.to_dict()):
+            raise ValueError("injector state was saved under a different "
+                             "fault plan")
+        self.events = collections.Counter(state["events"])
+        self.fired = collections.Counter(state["fired"])
+        self._spec_fired = list(state["spec_fired"])
+        self._spec_draws = list(state["spec_draws"])
+        self.fired_log = [tuple(x) for x in state["fired_log"]]
+        self._rngs = [np.random.default_rng([self.plan.seed, i])
+                      for i in range(len(self.plan.specs))]
+        for rng, n in zip(self._rngs, self._spec_draws):
+            if n:
+                rng.random(n)
+
     # -- core decision ---------------------------------------------------------
 
-    def _consult(self, site: str, family: str | None = None) -> bool:
-        """One event at ``site``; True if any matching spec fires."""
+    def _consult(self, site: str, family: str | None = None):
+        """One event at ``site``; returns the first matching spec that
+        fires (truthy) or None."""
         idx = self.events[site]
         self.events[site] += 1
-        hit = False
+        hit = None
         for i, spec in enumerate(self.plan.specs):
             if spec.site != site:
                 continue
-            if site == "launch" and spec.family is not None \
+            if site in LAUNCH_SITES and spec.family is not None \
                     and spec.family != family:
                 continue
             if spec.max_fires is not None \
@@ -147,18 +305,56 @@ class FaultInjector:
                 continue
             # consume exactly one draw per observed event so the stream is
             # reproducible regardless of which specs fire
-            draw = self._rngs[i].random() if spec.rate > 0.0 else 1.0
+            if spec.rate > 0.0:
+                draw = self._rngs[i].random()
+                self._spec_draws[i] += 1
+            else:
+                draw = 1.0
             if idx in spec.at or draw < spec.rate:
                 self._spec_fired[i] += 1
-                hit = True
-        if hit:
+                hit = hit if hit is not None else spec
+        if hit is not None:
             self.fired[site] += 1
             self.fired_log.append((site, idx))
         return hit
 
     # -- site hooks ------------------------------------------------------------
 
+    def _stall(self, spec: FaultSpec, family: str, complete: bool) -> None:
+        """Serve one injected stall at the launch boundary.
+
+        Blocks on the current :class:`DispatchToken` (when a watchdog
+        bounds this dispatch) or a plain timed wait.  A ``delay``
+        (``complete=True``) proceeds normally after its duration UNLESS
+        the watchdog aborted meanwhile; a ``hang`` never completes — it
+        raises :class:`HungLaunch` on abort or duration expiry, always
+        BEFORE any result scatter."""
+        token = current_dispatch_token()
+        if token is not None:
+            aborted = token.wait(None if not complete else spec.duration)
+            if aborted:
+                raise HungLaunch(
+                    f"injected {spec.site} at {family} launch aborted by "
+                    "watchdog")
+            if complete:
+                return
+            raise HungLaunch(f"injected hang at {family} launch released")
+        else:
+            import time
+            time.sleep(spec.duration)
+            if complete:
+                return
+            raise HungLaunch(
+                f"injected hang at {family} launch expired after "
+                f"{spec.duration}s (no watchdog installed)")
+
     def on_launch(self, family: str, n: int) -> None:
+        spec = self._consult("delay", family)
+        if spec is not None:
+            self._stall(spec, family, complete=True)
+        spec = self._consult("hang", family)
+        if spec is not None:
+            self._stall(spec, family, complete=False)
         if self._consult("launch", family):
             raise TransientFault(
                 f"injected transient fault at {family} launch "

@@ -9,28 +9,41 @@ tying throughput to the deterministic launch/upload counters.
     from repro.serve import (FheServeEngine, FheRequest, HeOp,
                              TenantKeyStore, standard_program)
 
+Crash safety (see :mod:`repro.serve.journal` / :mod:`repro.serve.recovery`):
+a journaled engine write-ahead-logs every admission, step, and terminal
+status; :meth:`FheServeEngine.snapshot` publishes atomic snapshots and
+:func:`recover` rebuilds a bit-identical engine from snapshot + journal
+tail.  :class:`DispatchWatchdog` bounds every dispatch against hung
+launches.
+
 The token-decode :class:`~repro.serve.engine.ServeEngine` for the LM
 substrate remains importable from its historical location.
 """
 from .engine import ServeEngine
 from .fhe import FheServeEngine
 from .ir import (BATCHED_KINDS, KEYED_KINDS, OP_KINDS, FheRequest, HeOp,
-                 RequestFailed, RequestRejected, RequestTimeout,
-                 admission_check, standard_program, standard_reference,
+                 LogicalClock, RequestFailed, RequestRejected,
+                 RequestTimeout, admission_check, rid_counter_state,
+                 set_rid_counter, standard_program, standard_reference,
                  standard_request)
+from .journal import Journal, JournalCorrupt, JournalError
 from .keystore import TenantDegraded, TenantKeyStore, UnknownTenant
 from .metrics import ServeMetrics
 from .plans import Plan, PlanCache
-from .resilience import (DEGRADED, HEALTHY, SHEDDING, OverloadController,
-                         RetryPolicy)
+from .recovery import RecoveryError, SnapshotStore, recover
+from .resilience import (DEGRADED, HEALTHY, SHEDDING, DispatchHung,
+                         DispatchWatchdog, OverloadController, RetryPolicy)
 from .scheduler import AdmissionQueue, QueueFull
 
 __all__ = [
-    "AdmissionQueue", "BATCHED_KINDS", "DEGRADED", "FheRequest",
-    "FheServeEngine", "HEALTHY", "HeOp", "KEYED_KINDS", "OP_KINDS",
-    "OverloadController", "Plan", "PlanCache", "QueueFull", "RequestFailed",
-    "RequestRejected", "RequestTimeout", "RetryPolicy", "SHEDDING",
-    "ServeEngine", "ServeMetrics", "TenantDegraded", "TenantKeyStore",
-    "UnknownTenant", "admission_check", "standard_program",
-    "standard_reference", "standard_request",
+    "AdmissionQueue", "BATCHED_KINDS", "DEGRADED", "DispatchHung",
+    "DispatchWatchdog", "FheRequest", "FheServeEngine", "HEALTHY", "HeOp",
+    "Journal", "JournalCorrupt", "JournalError", "KEYED_KINDS",
+    "LogicalClock", "OP_KINDS", "OverloadController", "Plan", "PlanCache",
+    "QueueFull", "RecoveryError", "RequestFailed", "RequestRejected",
+    "RequestTimeout", "RetryPolicy", "SHEDDING", "ServeEngine",
+    "ServeMetrics", "SnapshotStore", "TenantDegraded", "TenantKeyStore",
+    "UnknownTenant", "admission_check", "recover", "rid_counter_state",
+    "set_rid_counter", "standard_program", "standard_reference",
+    "standard_request",
 ]

@@ -76,20 +76,47 @@ class Batcher:
         """Dispatch one group through its (cached) plan and write results
         back into each request's register file."""
         req, op = group[0]
-        basis = req.env[op.srcs[0]].basis
-        plan_key = (op.kind, basis, len(group),
-                    req.tenant if op.kind in _KEYED_KINDS else None)
-        plan = self.plans.get(plan_key, lambda: self._build(req, op))
+        plan = self.plans.get(self.plan_key(group),
+                              lambda: self._build(req, op))
         plan(group)
 
+    def plan_key(self, group: list[Item]):
+        """(kind, basis, batch, tenant, build-arg).  The build-arg slot
+        carries ``op.arg`` for rescale — two rescale depths at the same
+        basis/batch must never share an executor — and None elsewhere."""
+        req, op = group[0]
+        basis = req.env[op.srcs[0]].basis
+        return (op.kind, basis, len(group),
+                req.tenant if op.kind in _KEYED_KINDS else None,
+                op.arg if op.kind == "rescale" else None)
+
     def _build(self, req: FheRequest, op: HeOp):
+        return self._build_kind(op.kind, req.tenant, op.arg)
+
+    def build_from_key(self, key):
+        """Rebuild the executor for a snapshotted plan key (crash
+        recovery).  Everything the builder needs lives in the key except
+        the params owner for a default-depth rescale, which falls back to
+        any registered tenant; returns None when a key cannot be rebuilt
+        statically (it will lazily rebuild on first use instead)."""
+        kind, _basis, _size, tenant, arg = key
+        if tenant is None:
+            tenants = self.keystore.tenants()
+            if kind == "rescale" and arg is None and not tenants:
+                return None
+            tenant = tenants[0] if tenants else None
+        try:
+            return self._build_kind(kind, tenant, arg)
+        except Exception:       # unknown tenant after re-registration drift
+            return None
+
+    def _build_kind(self, kind: str, tenant: str | None, arg):
         """Resolve everything static for one plan key ONCE: the dispatch
         function, the owning tenant (key-consuming kinds), the params and
         rescale depth.  The returned executor only stacks operands, touches
         keystore residency (so eviction/re-staging stays counted by the
         keystore, never silently inside a plan), dispatches the batched core
         op, and scatters results."""
-        kind = op.kind
         if kind in ("hadd", "hsub"):
             sub = kind == "hsub"
 
@@ -101,8 +128,8 @@ class Batcher:
         if kind == "pmult":
             return self._exec_pmult
         if kind == "rescale":
-            params = self.keystore.keyset(req.tenant).params
-            times = op.arg if op.arg is not None else params.rescale_primes
+            params = self.keystore.keyset(tenant).params
+            times = arg if arg is not None else params.rescale_primes
 
             def ex(items: list[Item]) -> None:
                 cts = [r.env[o.srcs[0]] for r, o in items]
@@ -110,7 +137,6 @@ class Batcher:
                                                        times=times))
             return ex
         if kind in ("hmult", "square"):
-            tenant = req.tenant
             many = ckks.hmult_many if kind == "hmult" else None
 
             def ex(items: list[Item]) -> None:
@@ -124,8 +150,6 @@ class Batcher:
                 self._scatter(items, outs)
             return ex
         if kind == "hrot":
-            tenant = req.tenant
-
             def ex(items: list[Item]) -> None:
                 keys = self.keystore.acquire(tenant)
                 cts = [r.env[o.srcs[0]] for r, o in items]
@@ -136,8 +160,22 @@ class Batcher:
 
     @staticmethod
     def _scatter(items: list[Item], outs) -> None:
-        for (req, op), out in zip(items, outs):
-            req.env[op.dst] = out
+        """Publish a dispatch's results into the request register files.
+
+        Under a watchdog-bounded dispatch, publication goes through the
+        token's commit gate: an abandoned worker's late results are
+        discarded (it unwinds as HungLaunch) instead of racing the retry
+        that replaced it — the transactional-scatter invariant holds even
+        across abandonment."""
+        from repro.runtime import faults
+        token = faults.current_dispatch_token()
+        if token is None:
+            for (req, op), out in zip(items, outs):
+                req.env[op.dst] = out
+            return
+        with token.commit():
+            for (req, op), out in zip(items, outs):
+                req.env[op.dst] = out
 
     def _exec_pmult(self, items: list[Item]) -> None:
         cts = [req.env[op.srcs[0]] for req, op in items]

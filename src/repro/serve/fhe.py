@@ -51,6 +51,7 @@ result` raises.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -60,11 +61,12 @@ from repro.runtime import faults
 from repro.runtime.faults import FaultError
 
 from .batcher import Batcher
-from .ir import KEYED_KINDS, FheRequest, admission_check
+from .ir import KEYED_KINDS, FheRequest, LogicalClock, admission_check
+from .journal import Journal
 from .keystore import TenantDegraded, TenantKeyStore
 from .metrics import ServeMetrics
 from .plans import PlanCache
-from .resilience import OverloadController, RetryPolicy
+from .resilience import DispatchHung, OverloadController, RetryPolicy
 from .scheduler import AdmissionQueue, QueueFull
 
 
@@ -73,12 +75,14 @@ class FheServeEngine:
                  batching: bool = True, queue_capacity: int = 1024,
                  clock=None, retry: RetryPolicy | None = None,
                  overload: OverloadController | None = None,
-                 enforce_deadlines: bool = True, sleeper=None):
+                 enforce_deadlines: bool = True, sleeper=None,
+                 journal=None, watchdog=None):
         self.keystore = keystore
         self.max_batch = max_batch
         self.queue = AdmissionQueue(capacity=queue_capacity)
         self.plans = PlanCache()
         self.metrics = ServeMetrics()
+        keystore.attach_metrics(self.metrics)
         self.batcher = Batcher(keystore, self.plans, batching=batching)
         self.active: list[FheRequest] = []
         self.completed: list[FheRequest] = []   # status "ok" only
@@ -88,8 +92,23 @@ class FheServeEngine:
         self.overload = overload if overload is not None \
             else OverloadController()
         self._retry_rng = np.random.default_rng(self.retry.seed)
+        self._retry_draws = 0                   # jitter-stream position
         self._sleep = sleeper if sleeper is not None else time.sleep
+        # a journaled engine must be deterministic, so it defaults to the
+        # logical clock; wall-clock engines keep their old behavior
+        if isinstance(journal, (str, os.PathLike)):
+            journal = Journal(journal)
+        self.journal = journal
+        self.watchdog = watchdog
+        self._replaying = False
+        if clock is None and journal is not None:
+            clock = LogicalClock()
         self._clock = clock if clock is not None else time.monotonic
+
+    def _journal(self, record: dict) -> None:
+        """Write-ahead append (no-op without a journal / during replay)."""
+        if self.journal is not None and not self._replaying:
+            self.journal.append(record)
 
     # -- submission -----------------------------------------------------------
 
@@ -118,6 +137,10 @@ class FheServeEngine:
         except QueueFull:
             return self._reject(req, "queue_full")
         req.admitted_at = self._clock()
+        if self.journal is not None and not self._replaying:
+            from .recovery import request_to_wire
+            self._journal({"type": "admit",
+                           "req": request_to_wire(req, env="none")})
         self.metrics.admitted += 1
         return True
 
@@ -131,6 +154,7 @@ class FheServeEngine:
     # -- terminal transitions -------------------------------------------------
 
     def _finish(self, req: FheRequest, now: float) -> None:
+        self._journal({"type": "terminal", "rid": req.rid, "status": "ok"})
         req.done = True
         req.status = "ok"
         req.finished_at = now
@@ -142,6 +166,8 @@ class FheServeEngine:
 
     def _fail(self, req: FheRequest, status: str, reason: str,
               now: float) -> None:
+        self._journal({"type": "terminal", "rid": req.rid, "status": status,
+                       "error": reason})
         req.done = True
         req.status = status
         req.error = reason
@@ -217,30 +243,47 @@ class FheServeEngine:
         transactional scatter makes redispatch safe).  Deterministic
         :class:`GuardError`\\ s are never retried — a group of ≥2 splits into
         singleton replays to isolate the poisoned request; the singleton
-        culprit is quarantined.  Returns ``[(req, status, reason), ...]``
-        for every request that could not be served.
+        culprit is quarantined.  A watchdog :class:`DispatchHung` is
+        retryable too (the stalled worker was unblocked pre-scatter), but
+        hang attempts are counted separately and escalate to a typed
+        ``hung`` split/quarantine after ``watchdog.escalate_after`` repeats
+        — a group that hangs every time is the workload, not the weather.
+        Returns ``[(req, status, reason), ...]`` for every request that
+        could not be served.
         """
         attempt = 0
+        hangs = 0
         while True:
             try:
-                self.batcher.execute(group)
+                if self.watchdog is not None:
+                    self.watchdog.run(lambda: self.batcher.execute(group))
+                else:
+                    self.batcher.execute(group)
                 self.metrics.groups_dispatched += 1
                 self.metrics.ops_executed += len(group)
                 if len(group) >= 2:
                     self.metrics.ops_batched += len(group)
                 return []
+            except DispatchHung as e:
+                self.metrics.transient_faults += 1
+                self.metrics.hung_dispatches += 1
+                self.overload.record_fault()
+                self._record_group_tenant_fault(group)
+                hangs += 1
+                if hangs >= self.watchdog.escalate_after \
+                        or attempt >= self.retry.max_retries:
+                    self.metrics.hang_escalations += 1
+                    return self._split_or_quarantine(group, depth, "hung", e)
+                self._backoff_group(attempt, group)
+                attempt += 1
             except FaultError as e:
                 self.metrics.transient_faults += 1
                 self.overload.record_fault()
+                self._record_group_tenant_fault(group)
                 if attempt >= self.retry.max_retries:
                     return self._split_or_quarantine(
                         group, depth, "transient_fault", e)
-                delay = self.retry.backoff(attempt, self._retry_rng)
-                self.metrics.backoff_time += delay
-                self._sleep(delay)
-                self.metrics.retries += 1
-                for req, _ in group:
-                    req.attempts += 1
+                self._backoff_group(attempt, group)
                 attempt += 1
             except guards.GuardError as e:
                 return self._split_or_quarantine(group, depth, "poisoned", e)
@@ -248,10 +291,26 @@ class FheServeEngine:
                 # keyed groups are single-tenant: the whole group fails fast
                 return [(req, "failed", "tenant_degraded") for req, _ in group]
 
+    def _backoff_group(self, attempt: int, group) -> None:
+        delay = self.retry.backoff(attempt, self._retry_rng)
+        self._retry_draws += 1
+        self.metrics.backoff_time += delay
+        self._sleep(delay)
+        self.metrics.retries += 1
+        for req, _ in group:
+            req.attempts += 1
+
+    def _record_group_tenant_fault(self, group) -> None:
+        """Keyed groups are single-tenant: pin the transient fault on that
+        tenant's history (key-free groups span tenants — no attribution)."""
+        req, op = group[0]
+        if op.kind in KEYED_KINDS:
+            self.metrics.record_tenant(req.tenant, transient_faults=1)
+
     def _split_or_quarantine(self, group, depth: int, reason: str, exc) -> list:
         if len(group) == 1:
             req, _ = group[0]
-            if reason == "poisoned":
+            if reason in ("poisoned", "hung"):
                 self.metrics.quarantined += 1
             return [(req, "failed", f"{reason}: {exc}")]
         # evict the culprit by replaying each request alone; the batched and
@@ -284,6 +343,10 @@ class FheServeEngine:
 
     def step(self) -> int:
         """One serving iteration; returns the number of ops attempted."""
+        # write-ahead: the record commits the *intent* to run this step, so
+        # a crash anywhere inside it replays the whole step from the same
+        # pre-step state and lands in the same post-step state
+        self._journal({"type": "step"})
         self.keystore.begin_step()
         now = self._clock()
         if self.enforce_deadlines:
@@ -334,6 +397,35 @@ class FheServeEngine:
             if not self.step() and not self.queue:
                 break
         return self.completed
+
+    # -- crash-safe serving (repro.serve.recovery) ----------------------------
+
+    def snapshot(self, store) -> str:
+        """Publish a committed snapshot of the full engine state into a
+        :class:`~repro.serve.recovery.SnapshotStore`.
+
+        Ordering is the durability contract: rotate the journal FIRST (the
+        new segment index goes into the snapshot as its replay start),
+        publish atomically, then drop the fully-covered older segments — a
+        crash between any two of these leaves a consistent
+        (snapshot, tail) pair on disk."""
+        from . import recovery
+        tail_from = self.journal.rotate() if self.journal is not None else 0
+        path = store.save(recovery.engine_state(
+            self, tail_from_segment=tail_from))
+        if self.journal is not None:
+            self.journal.drop_segments_before(tail_from)
+        return path
+
+    @classmethod
+    def restore(cls, snapshot_dir: str, journal_dir: str,
+                keystore: TenantKeyStore, **kwargs):
+        """Rebuild an engine from disk (newest committed snapshot + journal
+        tail replay); returns ``(engine, report)``.  See
+        :func:`repro.serve.recovery.recover`."""
+        from . import recovery
+        return recovery.recover(snapshot_dir, journal_dir, keystore,
+                                **kwargs)
 
     # -- reporting ------------------------------------------------------------
 

@@ -14,7 +14,6 @@ the admission queue (:mod:`repro.serve.scheduler`).
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import math
 from typing import Any
 
@@ -84,7 +83,63 @@ class HeOp:
                 f"register(s), got {len(self.srcs)}")
 
 
-_rid_counter = itertools.count()
+class LogicalClock:
+    """Deterministic monotonic clock for bit-exact serving replay.
+
+    Every read returns the current time and advances it by ``tick`` —
+    identical control flow therefore produces identical timestamps, which
+    is what makes deadlines, EDF ordering, and per-request latency
+    accounting replayable by the crash-recovery path
+    (:mod:`repro.serve.recovery`).  Wall-clock engines
+    (``clock=time.monotonic``, the default without a journal) keep their
+    old behavior but cannot be recovered bit-exactly.
+    """
+
+    def __init__(self, start: float = 0.0, tick: float = 1.0):
+        self.t = float(start)
+        self.tick = float(tick)
+
+    def __call__(self) -> float:
+        now = self.t
+        self.t += self.tick
+        return now
+
+    def state(self) -> dict:
+        return {"t": self.t, "tick": self.tick}
+
+    @classmethod
+    def from_state(cls, state: dict) -> "LogicalClock":
+        return cls(start=state["t"], tick=state["tick"])
+
+
+class _RidCounter:
+    """Deterministic, snapshot-restorable request-ID source.
+
+    Replaces the bare ``itertools.count`` so the crash-recovery path can
+    persist and restore the counter position — a recovered process then
+    assigns exactly the IDs the uninterrupted run would have."""
+
+    def __init__(self, start: int = 0):
+        self.next_rid = start
+
+    def __call__(self) -> int:
+        rid = self.next_rid
+        self.next_rid += 1
+        return rid
+
+
+_rid_counter = _RidCounter()
+
+
+def rid_counter_state() -> int:
+    """The next request ID to be assigned (snapshot this)."""
+    return _rid_counter.next_rid
+
+
+def set_rid_counter(next_rid: int) -> None:
+    """Restore the request-ID counter (recovery only — never rewind it in
+    a live process or IDs will collide)."""
+    _rid_counter.next_rid = int(next_rid)
 
 
 @dataclasses.dataclass
@@ -97,7 +152,7 @@ class FheRequest:
     deadline: float = math.inf              # absolute engine-clock deadline
     priority: int = 0                       # higher = more urgent
     plaintexts: dict = dataclasses.field(default_factory=dict)
-    rid: int = dataclasses.field(default_factory=lambda: next(_rid_counter))
+    rid: int = dataclasses.field(default_factory=lambda: _rid_counter())
 
     # -- runtime state (owned by the engine) ----------------------------------
     pc: int = 0

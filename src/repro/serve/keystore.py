@@ -51,6 +51,23 @@ class TenantKeyStore:
         self.degraded: set[str] = set()        # tenants with failed staging
         self.staging_retries = 0               # upload faults absorbed
         self.degrade_events = 0                # tenants marked degraded
+        # per-tenant fault history: {"staging_retries": n, "degrade_events": n}
+        self.tenant_faults: dict[str, dict] = {}
+        self._metrics = None                   # attached ServeMetrics (opt.)
+
+    def attach_metrics(self, metrics) -> None:
+        """Link a :class:`~repro.serve.metrics.ServeMetrics` so per-tenant
+        staging-fault history lands in the serving metrics and
+        :meth:`heal` can clear it (a healed tenant must not inherit stale
+        fault-pressure accounting)."""
+        self._metrics = metrics
+
+    def _record_tenant_fault(self, tenant: str, kind: str) -> None:
+        hist = self.tenant_faults.setdefault(
+            tenant, {"staging_retries": 0, "degrade_events": 0})
+        hist[kind] += 1
+        if self._metrics is not None:
+            self._metrics.record_tenant(tenant, **{kind: 1})
 
     # -- registration ---------------------------------------------------------
 
@@ -122,6 +139,7 @@ class TenantKeyStore:
             return n
         except FaultError:
             self.staging_retries += 1
+            self._record_tenant_fault(tenant, "staging_retries")
             ks.drop_device_caches()
             try:
                 n = self._stage(ks)
@@ -131,14 +149,27 @@ class TenantKeyStore:
                 ks.drop_device_caches()
                 self.degraded.add(tenant)
                 self.degrade_events += 1
+                self._record_tenant_fault(tenant, "degrade_events")
                 raise TenantDegraded(tenant) from e
 
     def is_degraded(self, tenant: str) -> bool:
         return tenant in self.degraded
 
     def heal(self, tenant: str) -> None:
-        """Clear the degraded mark; the next acquire re-attempts staging."""
+        """Clear the degraded mark AND the tenant's fault history; the next
+        acquire re-attempts staging.
+
+        Healing is an operator statement that the fault condition is gone
+        (key material replaced, link repaired), so the tenant's
+        retry/backoff accounting resets with it — in both the keystore's
+        per-tenant history and any attached
+        :class:`~repro.serve.metrics.ServeMetrics` — instead of leaving
+        stale fault pressure that would bias future overload/debugging
+        decisions against a now-healthy tenant."""
         self.degraded.discard(tenant)
+        self.tenant_faults.pop(tenant, None)
+        if self._metrics is not None:
+            self._metrics.reset_tenant(tenant)
 
     def _stage(self, ks: KeySet) -> int:
         """Warm the device-resident evk forms used by the serving hot path:
@@ -158,6 +189,41 @@ class TenantKeyStore:
         ks.relin.at_level(idx, basis, ndig)
         n += 2 * ndig                          # (a_j, b_j) per digit
         return n
+
+    # -- crash-safe serving (repro.serve.recovery) ----------------------------
+
+    def state_dict(self) -> dict:
+        """Residency order, degradation state, and fault accounting.  Key
+        material itself is NOT serialized — tenants re-register their keys
+        with the recovered process (the host-side registry is the source
+        of truth; device-resident forms are gone after a crash anyway)."""
+        return {
+            "resident": list(self._resident),       # LRU order, oldest first
+            "degraded": sorted(self.degraded),
+            "uploads": self.uploads,
+            "evictions": self.evictions,
+            "staging_retries": self.staging_retries,
+            "degrade_events": self.degrade_events,
+            "tenant_faults": {t: dict(h)
+                              for t, h in self.tenant_faults.items()},
+        }
+
+    def load_state(self, state: dict, restage: bool = True) -> None:
+        """Restore accounting + degradation, then re-stage the previously
+        resident tenants in LRU order (their device-side evk forms died
+        with the crashed process).  Re-staging transfers count as fresh
+        uploads — they ARE fresh uploads."""
+        self.degraded = set(state["degraded"])
+        self.uploads = state["uploads"]
+        self.evictions = state["evictions"]
+        self.staging_retries = state["staging_retries"]
+        self.degrade_events = state["degrade_events"]
+        self.tenant_faults = {t: dict(h)
+                              for t, h in state["tenant_faults"].items()}
+        if restage:
+            for tenant in state["resident"]:
+                if tenant in self._registered and tenant not in self.degraded:
+                    self.acquire(tenant)
 
     # -- convenience ----------------------------------------------------------
 

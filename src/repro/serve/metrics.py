@@ -38,14 +38,30 @@ class ServeMetrics:
     quarantined: int = 0                 # poisoned requests evicted from waves
     group_splits: int = 0                # faulted groups replayed as singletons
     backoff_time: float = 0.0            # total seconds slept in backoff
+    hung_dispatches: int = 0             # watchdog deadline trips
+    hang_escalations: int = 0            # groups escalated to hung quarantine
     health: str = "healthy"              # overload controller state
     fault_pressure: float = 0.0          # overload controller EMA
     rejected_reasons: dict = dataclasses.field(default_factory=dict)
+    # per-tenant fault history (staging retries, degradations, transient
+    # faults, backoff) — reset by TenantKeyStore.heal() so a healed tenant
+    # does not inherit stale fault pressure
+    tenant_faults: dict = dataclasses.field(default_factory=dict)
 
     def reject(self, reason: str) -> None:
         self.rejected += 1
         key = reason.split(":")[-1] if ":" in reason else reason
         self.rejected_reasons[key] = self.rejected_reasons.get(key, 0) + 1
+
+    def record_tenant(self, tenant: str, **deltas) -> None:
+        """Accumulate per-tenant fault accounting (numeric deltas)."""
+        hist = self.tenant_faults.setdefault(tenant, {})
+        for key, d in deltas.items():
+            hist[key] = hist.get(key, 0) + d
+
+    def reset_tenant(self, tenant: str) -> None:
+        """Drop one tenant's fault history (tenant healed)."""
+        self.tenant_faults.pop(tenant, None)
 
     _launch_snap: dict = dataclasses.field(default_factory=dict, repr=False)
     _stage_snap: int = 0
@@ -84,12 +100,43 @@ class ServeMetrics:
             "quarantined": self.quarantined,
             "group_splits": self.group_splits,
             "backoff_time": self.backoff_time,
+            "hung_dispatches": self.hung_dispatches,
+            "hang_escalations": self.hang_escalations,
             "health": self.health,
             "fault_pressure": self.fault_pressure,
             "rejected_reasons": dict(self.rejected_reasons),
+            "tenant_faults": {t: dict(h)
+                              for t, h in self.tenant_faults.items()},
         }
         if plan_stats is not None:
             out["plan_cache"] = plan_stats
         if key_uploads is not None:
             out["key_uploads"] = key_uploads
         return out
+
+    # -- crash-safe serving (repro.serve.recovery) ----------------------------
+
+    _STATE_FIELDS = (
+        "admitted", "rejected", "served", "missed_deadlines", "steps",
+        "groups_dispatched", "ops_executed", "ops_batched", "wait_time",
+        "serve_time", "failed", "timed_out", "deadline_missed_at_pop",
+        "shed", "transient_faults", "retries", "quarantined", "group_splits",
+        "backoff_time", "hung_dispatches", "hang_escalations", "health",
+        "fault_pressure",
+    )
+
+    def state_dict(self) -> dict:
+        """All request-accounting counters (the launch/stage region
+        snapshots are process-local and deliberately excluded)."""
+        out = {f: getattr(self, f) for f in self._STATE_FIELDS}
+        out["rejected_reasons"] = dict(self.rejected_reasons)
+        out["tenant_faults"] = {t: dict(h)
+                                for t, h in self.tenant_faults.items()}
+        return out
+
+    def load_state(self, state: dict) -> None:
+        for f in self._STATE_FIELDS:
+            setattr(self, f, state[f])
+        self.rejected_reasons = dict(state["rejected_reasons"])
+        self.tenant_faults = {t: dict(h)
+                              for t, h in state["tenant_faults"].items()}

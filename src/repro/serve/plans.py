@@ -61,3 +61,36 @@ class PlanCache:
 
     def __len__(self) -> int:
         return len(self._plans)
+
+    # -- crash-safe serving (repro.serve.recovery) ----------------------------
+
+    def keys(self) -> list:
+        return list(self._plans)
+
+    def state_dict(self) -> dict:
+        """Plan keys + hit/miss accounting — executors themselves are
+        rebuilt at restore (they close over live keystore state)."""
+        return {"keys": self.keys(), "hits": self.hits,
+                "misses": self.misses}
+
+    def load_state(self, state: dict, builder) -> int:
+        """Prewarm from a snapshot: ``builder(key)`` returns an executor
+        (or None to skip a key that cannot be rebuilt statically — it will
+        lazily rebuild on its first post-recovery miss).  Hit/miss
+        counters restore verbatim, so prewarming is invisible to the
+        zero-steady-state-builds gate.  Returns the number of plans
+        rebuilt.  Keys that crossed a JSON round-trip come back as nested
+        lists and are re-frozen to the tuples the live cache hashes on."""
+
+        def freeze(k):
+            return tuple(freeze(x) for x in k) if isinstance(k, list) else k
+
+        rebuilt = 0
+        for key in map(freeze, state["keys"]):
+            ex = builder(key)
+            if ex is not None:
+                self._plans[key] = Plan(key=key, execute=ex)
+                rebuilt += 1
+        self.hits = state["hits"]
+        self.misses = state["misses"]
+        return rebuilt

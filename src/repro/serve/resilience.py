@@ -19,12 +19,26 @@ Two concerns live here, both deterministic and unit-testable in isolation:
 
   surfaced through ``ServeMetrics`` as the engine's health state so
   operators see load shedding rather than silent queue growth.
+* :class:`DispatchWatchdog` — bounds every kernel dispatch with a wall-clock
+  deadline.  The dispatch runs on a worker thread; if it has not retired by
+  the deadline the watchdog aborts its :class:`~repro.runtime.faults.
+  DispatchToken` (unblocking an injected stall, which unwinds as
+  :class:`~repro.runtime.faults.HungLaunch` before any result scatter) and
+  raises :class:`DispatchHung` — a retryable
+  :class:`~repro.runtime.faults.FaultError`, safe because the batcher's
+  scatter is transactional.  The engine escalates *repeated* hangs on the
+  same group to split-and-quarantine with a typed ``hung`` failure detail
+  (see ``repro.serve.fhe``).
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import numpy as np
+
+from repro.runtime import faults
+from repro.runtime.faults import FaultError
 
 HEALTHY = "healthy"
 DEGRADED = "degraded"
@@ -107,3 +121,83 @@ class OverloadController:
             return 0
         keep = self.effective_batch(max_batch) * self.backlog_factor
         return max(0, queued - keep)
+
+
+class DispatchHung(FaultError):
+    """A dispatch blew its watchdog deadline.  Retryable (the stalled
+    worker was unblocked pre-scatter), but the engine counts hang attempts
+    separately and escalates repeats to a typed ``hung`` quarantine."""
+
+
+class DispatchWatchdog:
+    """Bound each kernel dispatch with a deadline; convert stalls into
+    retryable faults.
+
+    ``run(fn)`` executes ``fn`` on a worker thread and joins with
+    ``deadline`` seconds.  On timeout it aborts the dispatch's cancellation
+    token — an injected ``hang``/``delay`` blocked on that token unwinds
+    as :class:`~repro.runtime.faults.HungLaunch` without scattering any
+    result — waits up to ``grace`` seconds for the worker to acknowledge,
+    and raises :class:`DispatchHung`.  A real (non-injected) hung kernel
+    cannot be interrupted from the host; the worker thread is daemonic and
+    abandoned, which is exactly what a production watchdog can promise:
+    the *engine* stays live even when a launch does not.
+
+    ``escalate_after``: how many hangs the SAME group may absorb before
+    the engine stops retrying and splits/quarantines it with a typed
+    ``hung`` status (repeated hangs on one group mean the workload, not
+    the weather — retrying forever would stall the whole engine, the
+    exact failure this watchdog exists to bound).
+    """
+
+    def __init__(self, deadline: float = 0.5, grace: float = 0.1,
+                 escalate_after: int = 2):
+        assert deadline > 0.0 and grace >= 0.0 and escalate_after >= 1
+        self.deadline = deadline
+        self.grace = grace
+        self.escalate_after = escalate_after
+        self.timeouts = 0                    # dispatches abandoned
+        self.slow_dispatches = 0             # completed but past deadline
+        self.abandoned_workers = 0           # workers that never acknowledged
+
+    def run(self, fn) -> None:
+        token = faults.begin_dispatch()
+        done = threading.Event()
+        err: list[BaseException] = []
+
+        def worker():
+            faults.bind_dispatch_token(token)
+            try:
+                fn()
+            except BaseException as e:       # noqa: BLE001 — relayed below
+                err.append(e)
+            finally:
+                done.set()
+
+        t = threading.Thread(target=worker, daemon=True,
+                             name="dispatch-watchdog-worker")
+        import time
+        t0 = time.monotonic()
+        t.start()
+        try:
+            if not done.wait(self.deadline):
+                token.abort()
+                finished = done.wait(self.grace)
+                if finished and not err:
+                    # completed at the wire before the abort landed — its
+                    # results are already scattered and valid; replaying a
+                    # scattered group would double-apply aliasing ops, so
+                    # this is a slow dispatch, not a hang
+                    self.slow_dispatches += 1
+                    return
+                self.timeouts += 1
+                if not finished:
+                    self.abandoned_workers += 1
+                raise DispatchHung(
+                    f"dispatch exceeded {self.deadline}s watchdog deadline")
+            if time.monotonic() - t0 > self.deadline:
+                self.slow_dispatches += 1
+            if err:
+                raise err[0]
+        finally:
+            faults.end_dispatch()

@@ -10,7 +10,6 @@ visible, not silent).
 from __future__ import annotations
 
 import heapq
-import itertools
 
 from .ir import FheRequest
 
@@ -23,14 +22,40 @@ class AdmissionQueue:
     def __init__(self, capacity: int = 1024):
         self.capacity = capacity
         self._heap: list = []
-        self._seq = itertools.count()
+        self._next_seq = 0            # plain int so recovery can restore it
 
     def push(self, req: FheRequest) -> None:
         if len(self._heap) >= self.capacity:
             raise QueueFull(
                 f"admission queue at capacity ({self.capacity})")
-        heapq.heappush(self._heap,
-                       (-req.priority, req.deadline, next(self._seq), req))
+        seq = self._next_seq
+        self._next_seq += 1
+        heapq.heappush(self._heap, (-req.priority, req.deadline, seq, req))
+
+    # -- crash-safe serving (repro.serve.recovery) ----------------------------
+
+    def snapshot_state(self, req_to_wire) -> dict:
+        """Queue contents in internal heap-array order (a valid heap
+        round-trips verbatim), with each entry's FIFO tie-break sequence —
+        restoring reproduces EDF ordering bit-exactly."""
+        return {
+            "next_seq": self._next_seq,
+            "entries": [{"seq": seq, "req": req_to_wire(req)}
+                        for (_, _, seq, req) in self._heap],
+        }
+
+    def restore_state(self, state: dict, req_from_wire) -> list[FheRequest]:
+        """Rebuild the heap from :meth:`snapshot_state`; returns the
+        restored requests (so the engine can index them by rid)."""
+        reqs = []
+        self._heap = []
+        for entry in state["entries"]:
+            req = req_from_wire(entry["req"])
+            self._heap.append(
+                (-req.priority, req.deadline, entry["seq"], req))
+            reqs.append(req)
+        self._next_seq = state["next_seq"]
+        return reqs
 
     def pop(self) -> FheRequest:
         return heapq.heappop(self._heap)[-1]

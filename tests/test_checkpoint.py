@@ -1,0 +1,120 @@
+"""Checkpoint manager failure paths: atomic publish + verified fallback.
+
+The restore contract that crash-safe serving snapshots also reuse
+(``repro.serve.recovery.SnapshotStore`` mirrors the same tmp-dir →
+hash → COMMITTED → rename protocol): a step whose content fails
+verification — hash mismatch, torn shard, missing COMMITTED marker —
+falls back to the next older committed step, while a pinned ``step=``
+restore never silently loads a different step.
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _tree(v: float):
+    return {"w": jnp.full((4, 3), v, dtype=jnp.float32),
+            "b": jnp.full((3,), v, dtype=jnp.float32)}
+
+
+def _step_dir(mgr, step):
+    return os.path.join(mgr.dir, f"step_{step:09d}")
+
+
+@pytest.fixture()
+def mgr(tmp_path):
+    m = CheckpointManager(str(tmp_path / "ckpt"), keep=3)
+    m.save(1, _tree(1.0))
+    m.save(2, _tree(2.0))
+    return m
+
+
+def test_restore_latest_committed(mgr):
+    tree, step = mgr.restore(_tree(0.0))
+    assert step == 2
+    assert float(tree["w"][0, 0]) == 2.0
+
+
+def test_fallback_on_hash_mismatch(mgr):
+    # bit rot in the newest shard: same shapes, different bytes
+    shard = os.path.join(_step_dir(mgr, 2), "shard_0.npz")
+    np.savez(shard, leaf_0=np.zeros((3,), np.float32),
+             leaf_1=np.zeros((4, 3), np.float32))
+    tree, step = mgr.restore(_tree(0.0))
+    assert step == 1
+    assert float(tree["w"][0, 0]) == 1.0
+
+
+def test_fallback_on_torn_shard(mgr):
+    shard = os.path.join(_step_dir(mgr, 2), "shard_0.npz")
+    size = os.path.getsize(shard)
+    with open(shard, "r+b") as f:
+        f.truncate(size // 2)
+    tree, step = mgr.restore(_tree(0.0))
+    assert step == 1
+
+
+def test_fallback_on_missing_committed(mgr):
+    os.unlink(os.path.join(_step_dir(mgr, 2), "COMMITTED"))
+    # an uncommitted step is invisible: not listed, not restored
+    assert mgr.list_steps() == [1]
+    assert mgr.latest_step() == 1
+    tree, step = mgr.restore(_tree(0.0))
+    assert step == 1
+
+
+def test_fallback_on_tree_drift(mgr):
+    manifest_path = os.path.join(_step_dir(mgr, 2), "manifest.json")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    manifest["names"] = ["['stale']"] * len(manifest["names"])
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f)
+    tree, step = mgr.restore(_tree(0.0))
+    assert step == 1
+
+
+def test_all_steps_bad_raises_with_per_step_errors(mgr):
+    for s in (1, 2):
+        np.savez(os.path.join(_step_dir(mgr, s), "shard_0.npz"),
+                 leaf_0=np.zeros((3,), np.float32),
+                 leaf_1=np.zeros((4, 3), np.float32))
+    with pytest.raises(FileNotFoundError, match="step 1.*hash mismatch"):
+        mgr.restore(_tree(0.0))
+
+
+def test_pinned_restore_never_falls_back(mgr):
+    shard = os.path.join(_step_dir(mgr, 2), "shard_0.npz")
+    np.savez(shard, leaf_0=np.zeros((3,), np.float32),
+             leaf_1=np.zeros((4, 3), np.float32))
+    with pytest.raises(AssertionError, match="hash mismatch"):
+        mgr.restore(_tree(0.0), step=2)
+    # pinning an uncommitted step raises rather than picking a neighbor
+    os.unlink(os.path.join(_step_dir(mgr, 2), "COMMITTED"))
+    with pytest.raises(FileNotFoundError, match="COMMITTED"):
+        mgr.restore(_tree(0.0), step=2)
+    # the pinned-but-healthy path still works
+    tree, step = mgr.restore(_tree(0.0), step=1)
+    assert step == 1
+
+
+def test_fallback_disabled_raises(mgr):
+    np.savez(os.path.join(_step_dir(mgr, 2), "shard_0.npz"),
+             leaf_0=np.zeros((3,), np.float32),
+             leaf_1=np.zeros((4, 3), np.float32))
+    with pytest.raises(AssertionError):
+        mgr.restore(_tree(0.0), fallback=False)
+
+
+def test_skip_verify_trusts_shapes_only(mgr):
+    # verify=False skips hashes but still enforces shapes
+    np.savez(os.path.join(_step_dir(mgr, 2), "shard_0.npz"),
+             leaf_0=np.full((3,), 9.0, np.float32),
+             leaf_1=np.full((4, 3), 9.0, np.float32))
+    tree, step = mgr.restore(_tree(0.0), verify=False)
+    assert step == 2 and float(tree["w"][0, 0]) == 9.0

@@ -1,0 +1,520 @@
+"""Crash-safe serving tests: journal durability, deterministic recovery,
+and the dispatch watchdog.
+
+Covers the recovery guarantees ``benchmarks/bench_recovery.py`` gates on,
+at test scale:
+
+* the write-ahead journal round-trips records exactly, tolerates a torn
+  tail (a crash mid-append), refuses mid-file corruption, and rotates
+  segments without losing records;
+* snapshots publish atomically — a corrupted or uncommitted newest
+  snapshot falls back to the previous committed one;
+* an engine killed at an arbitrary step boundary (or mid-save) recovers
+  from snapshot + journal tail to BIT-IDENTICAL results and terminal
+  statuses, including runs with injected faults mid-flight (retry-jitter
+  and injector RNG streams restore to their exact positions);
+* the dispatch watchdog detects a scripted hang within its deadline,
+  retries it safely (the stalled worker unwinds pre-scatter), and
+  escalates repeated hangs on the same group to a typed ``hung``
+  quarantine;
+* ``TenantKeyStore.heal`` clears the tenant's fault accounting in the
+  serve metrics (a healed tenant does not inherit stale fault pressure).
+
+The engine/wave shapes mirror ``test_serve_fast`` (N=2⁹, L=4, alternating
+tenants) so the jit cache is shared across the suite run.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import params as prm
+from repro.core import keys as K
+from repro.runtime import faults
+from repro.serve import (DispatchHung, DispatchWatchdog, FheServeEngine,
+                         Journal, JournalCorrupt, LogicalClock,
+                         SnapshotStore, TenantKeyStore, recover,
+                         set_rid_counter, standard_request)
+from repro.serve.journal import read_segment, replay_directory
+
+N, L = 1 << 9, 4
+TENANTS = ("alice", "bob")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    p = prm.make_params(N=N, L=L, K=2, dnum=2)
+    keysets = {t: K.keygen(p, rotations=(1,), seed=i)
+               for i, t in enumerate(TENANTS)}
+    return p, keysets
+
+
+def _store(keysets):
+    store = TenantKeyStore(max_resident=len(TENANTS))
+    for t, ks in keysets.items():
+        store.register(t, ks)
+    return store
+
+
+def _make_wave(p, store, seeds):
+    """Build requests OUTSIDE any fault-injection region, so scripted
+    event indices count engine dispatches only."""
+    reqs = []
+    for i, seed in enumerate(seeds):
+        t = TENANTS[i % len(TENANTS)]
+        r, _ = standard_request(p, store.keyset(t), t, seed=seed)
+        reqs.append(r)
+    return reqs
+
+
+def _submit_wave(eng, p, store, seeds):
+    reqs = _make_wave(p, store, seeds)
+    for r in reqs:
+        assert eng.submit(r)
+    return reqs
+
+
+def _ct_bits(ct):
+    return (np.asarray(ct.a.data, dtype=np.uint32),
+            np.asarray(ct.b.data, dtype=np.uint32))
+
+
+def _results_bits(eng):
+    out = {}
+    for r in eng.completed:
+        out[r.rid] = {k: _ct_bits(v) for k, v in r.result().items()}
+    return out
+
+
+def _assert_bits_equal(ref, got):
+    assert set(ref) == set(got)
+    for rid in ref:
+        assert set(ref[rid]) == set(got[rid])
+        for k in ref[rid]:
+            for a, b in zip(ref[rid][k], got[rid][k]):
+                assert np.array_equal(a, b), f"rid {rid} register {k}"
+
+
+# ---------------------------------------------------------------------------
+# journal units (no engine, no jax)
+# ---------------------------------------------------------------------------
+
+def test_journal_roundtrip_and_rotation(tmp_path):
+    d = str(tmp_path / "j")
+    recs = [{"type": "step"}, {"type": "admit", "x": 1},
+            {"type": "terminal", "deadline": float("inf")}]
+    with Journal(d) as j:
+        j.append(recs[0])
+        j.append(recs[1])
+        assert j.rotate() == 1
+        j.append(recs[2])
+        got, torn = j.replay()
+        assert got == recs and torn == 0
+        # segments fully covered by a snapshot drop; the tail survives
+        assert j.drop_segments_before(1) == 1
+        got, torn = j.replay(from_segment=1)
+        assert got == [recs[2]] and torn == 0
+
+
+def test_journal_reopen_resumes_new_segment(tmp_path):
+    d = str(tmp_path / "j")
+    with Journal(d) as j:
+        j.append({"a": 1})
+        first = j.segment
+    with Journal(d) as j2:
+        assert j2.segment == first + 1       # never appends to an old tail
+        j2.append({"b": 2})
+        assert j2.replay()[0] == [{"a": 1}, {"b": 2}]
+
+
+def test_journal_torn_tail_tolerated(tmp_path):
+    d = str(tmp_path / "j")
+    j = Journal(d)
+    j.append({"k": 1})
+    j.append({"k": 2})
+    j.close()
+    seg = os.path.join(d, "seg_000000.wal")
+    size = os.path.getsize(seg)
+    with open(seg, "r+b") as f:
+        f.truncate(size - 5)                 # crash mid-append
+    recs, torn = read_segment(seg)
+    assert recs == [{"k": 1}] and torn > 0
+    # torn tail on the FINAL segment is fine for a full replay too
+    recs, torn = replay_directory(d)
+    assert recs == [{"k": 1}] and torn > 0
+
+
+def test_journal_midfile_corruption_raises(tmp_path):
+    d = str(tmp_path / "j")
+    j = Journal(d)
+    j.append({"k": 1})
+    j.append({"k": 2})
+    j.close()
+    seg = os.path.join(d, "seg_000000.wal")
+    with open(seg, "r+b") as f:
+        f.seek(14)                           # inside the first payload
+        f.write(b"\xff")
+    with pytest.raises(JournalCorrupt):
+        read_segment(seg)
+    # non-strict readers stop at the bad frame instead
+    recs, torn = read_segment(seg, strict=False)
+    assert recs == [] and torn > 0
+
+
+def test_journal_torn_nonfinal_segment_raises(tmp_path):
+    d = str(tmp_path / "j")
+    j = Journal(d)
+    j.append({"k": 1})
+    j.rotate()
+    j.append({"k": 2})
+    j.close()
+    seg0 = os.path.join(d, "seg_000000.wal")
+    with open(seg0, "r+b") as f:
+        f.truncate(os.path.getsize(seg0) - 3)
+    with pytest.raises(JournalCorrupt):
+        Journal(d).replay()
+
+
+# ---------------------------------------------------------------------------
+# snapshot store units
+# ---------------------------------------------------------------------------
+
+def test_snapshot_fallback_on_corruption(tmp_path):
+    store = SnapshotStore(str(tmp_path / "s"))
+    store.save({"v": 1})
+    newest = store.save({"v": 2})
+    with open(os.path.join(newest, "state.json"), "a") as f:
+        f.write(" ")                         # hash no longer matches
+    state, path = store.load_latest_valid()
+    assert state == {"v": 1} and path.endswith("snap_000000000")
+
+
+def test_snapshot_fallback_on_missing_marker(tmp_path):
+    store = SnapshotStore(str(tmp_path / "s"))
+    store.save({"v": 1})
+    newest = store.save({"v": 2})
+    os.unlink(os.path.join(newest, "COMMITTED"))   # crash before commit
+    state, _ = store.load_latest_valid()
+    assert state == {"v": 1}
+
+
+def test_snapshot_cold_start(tmp_path):
+    store = SnapshotStore(str(tmp_path / "s"))
+    assert store.load_latest_valid() == (None, None)
+
+
+# ---------------------------------------------------------------------------
+# determinism primitives
+# ---------------------------------------------------------------------------
+
+def test_logical_clock_roundtrip():
+    c = LogicalClock(start=3.0, tick=0.5)
+    assert c() == 3.0 and c() == 3.5
+    c2 = LogicalClock.from_state(c.state())
+    assert c2() == c() and c2() == c()
+
+
+def test_rid_counter_restore():
+    from repro.serve import rid_counter_state
+    set_rid_counter(5000)
+    assert rid_counter_state() == 5000
+    from repro.serve.ir import _rid_counter
+    assert _rid_counter() == 5000 and _rid_counter() == 5001
+
+
+# ---------------------------------------------------------------------------
+# engine kill/recover
+# ---------------------------------------------------------------------------
+
+def _reference_run(p, keysets, seeds, rid_base):
+    set_rid_counter(rid_base)
+    store = _store(keysets)
+    eng = FheServeEngine(store, clock=LogicalClock(), sleeper=lambda s: None)
+    _submit_wave(eng, p, store, seeds)
+    eng.run_until_drained()
+    return _results_bits(eng), {r.rid: r.status for r in eng.failed}
+
+
+@pytest.mark.parametrize("kill_after,snap_after", [(1, None), (2, 1),
+                                                   (3, 2), (4, None)])
+def test_kill_at_step_boundary_recovers_bit_identical(
+        tmp_path, setup, kill_after, snap_after):
+    p, keysets = setup
+    seeds = [100, 101, 102, 103]
+    base = 10_000 + 100 * kill_after
+    ref_bits, ref_failed = _reference_run(p, keysets, seeds, base)
+
+    jdir, sdir = str(tmp_path / "j"), str(tmp_path / "s")
+    set_rid_counter(base)
+    store = _store(keysets)
+    eng = FheServeEngine(store, journal=jdir, sleeper=lambda s: None)
+    snaps = SnapshotStore(sdir)
+    _submit_wave(eng, p, store, seeds)
+    for step in range(1, kill_after + 1):
+        eng.step()
+        if snap_after is not None and step == snap_after:
+            eng.snapshot(snaps)
+    eng.journal.close()                      # "crash"
+    del eng
+
+    eng2, report = recover(sdir, jdir, _store(keysets),
+                           sleeper=lambda s: None)
+    eng2.run_until_drained()
+    _assert_bits_equal(ref_bits, _results_bits(eng2))
+    assert {r.rid: r.status for r in eng2.failed} == ref_failed
+    if snap_after is not None:
+        assert report["snapshot"] is not None
+
+
+def test_kill_mid_save_falls_back_to_previous_snapshot(tmp_path, setup):
+    p, keysets = setup
+    seeds = [200, 201, 202, 203]
+    ref_bits, _ = _reference_run(p, keysets, seeds, 20_000)
+
+    jdir, sdir = str(tmp_path / "j"), str(tmp_path / "s")
+    set_rid_counter(20_000)
+    store = _store(keysets)
+    eng = FheServeEngine(store, journal=jdir, sleeper=lambda s: None)
+    snaps = SnapshotStore(sdir)
+    _submit_wave(eng, p, store, seeds)
+    eng.step()
+    eng.snapshot(snaps)                      # committed
+    eng.step()
+    # crash MID-second-save: rotation happened, the state was written, but
+    # the publish never committed — and the crash means drop_segments_before
+    # never ran, so the first snapshot's tail is still fully on disk
+    from repro.serve import recovery as rec
+    tail2 = eng.journal.rotate()
+    aborted = snaps.save(rec.engine_state(eng, tail_from_segment=tail2))
+    os.unlink(os.path.join(aborted, "COMMITTED"))
+    eng.step()
+    eng.journal.close()
+    del eng
+
+    eng2, report = recover(sdir, jdir, _store(keysets),
+                           sleeper=lambda s: None)
+    assert report["snapshot"].endswith("snap_000000000")
+    eng2.run_until_drained()
+    _assert_bits_equal(ref_bits, _results_bits(eng2))
+
+
+def test_kill_mid_save_tail_still_covers_old_snapshot(tmp_path, setup):
+    """The snapshot protocol must rotate BEFORE publishing: verify the
+    journal still holds every record the previous snapshot needs after a
+    newer snapshot is destroyed."""
+    p, keysets = setup
+    jdir, sdir = str(tmp_path / "j"), str(tmp_path / "s")
+    set_rid_counter(25_000)
+    store = _store(keysets)
+    eng = FheServeEngine(store, journal=jdir, sleeper=lambda s: None)
+    snaps = SnapshotStore(sdir)
+    _submit_wave(eng, p, store, [300, 301])
+    eng.step()
+    first = eng.snapshot(snaps)
+    eng.step()
+    state1 = snaps.load(first)
+    tail1 = state1["tail_from_segment"]
+    from repro.serve.journal import replay_directory
+    eng.journal.close()
+    records, _ = replay_directory(jdir, from_segment=tail1)
+    assert any(r["type"] == "step" for r in records)
+
+
+def test_recovery_under_injected_faults_bit_identical(tmp_path, setup):
+    """Kill/recover a run with transient launch faults in flight: the
+    retry-jitter RNG and the injector's per-spec streams must restore to
+    their exact positions for replay to stay bit-identical."""
+    p, keysets = setup
+    seeds = [400, 401, 402, 403]
+    plan = faults.FaultPlan(
+        [faults.FaultSpec(site="launch", rate=0.05)], seed=11)
+
+    set_rid_counter(30_000)
+    store = _store(keysets)
+    eng = FheServeEngine(store, clock=LogicalClock(), sleeper=lambda s: None)
+    wave = _make_wave(p, store, seeds)
+    with faults.inject(plan):
+        for r in wave:
+            assert eng.submit(r)
+        eng.run_until_drained()
+    ref_bits = _results_bits(eng)
+    ref_failed = {r.rid: r.status for r in eng.failed}
+
+    jdir, sdir = str(tmp_path / "j"), str(tmp_path / "s")
+    set_rid_counter(30_000)
+    store = _store(keysets)
+    eng = FheServeEngine(store, journal=jdir, sleeper=lambda s: None)
+    snaps = SnapshotStore(sdir)
+    wave = _make_wave(p, store, seeds)
+    with faults.inject(plan):
+        for r in wave:
+            assert eng.submit(r)
+        eng.step()
+        eng.step()
+        eng.snapshot(snaps)                  # injector state rides along
+        eng.step()
+    eng.journal.close()
+    del eng
+
+    with faults.inject(plan) as inj2:
+        eng2, _ = recover(sdir, jdir, _store(keysets), injector=inj2,
+                          sleeper=lambda s: None)
+        eng2.run_until_drained()
+    _assert_bits_equal(ref_bits, _results_bits(eng2))
+    assert {r.rid: r.status for r in eng2.failed} == ref_failed
+
+
+def test_recovered_engine_keeps_serving(tmp_path, setup):
+    """Recovery is not an endpoint: the engine comes back journaling into
+    a fresh segment and serves new work."""
+    p, keysets = setup
+    jdir, sdir = str(tmp_path / "j"), str(tmp_path / "s")
+    set_rid_counter(40_000)
+    store = _store(keysets)
+    eng = FheServeEngine(store, journal=jdir, sleeper=lambda s: None)
+    _submit_wave(eng, p, store, [500, 501])
+    eng.step()
+    eng.journal.close()
+    del eng
+
+    store2 = _store(keysets)
+    eng2, _ = recover(sdir, jdir, store2, sleeper=lambda s: None)
+    eng2.run_until_drained()
+    served_before = eng2.metrics.served
+    assert served_before == 2
+    # rids continue past everything the journal saw — no collisions
+    r, _ = standard_request(p, store2.keyset("alice"), "alice", seed=502)
+    assert r.rid >= 40_002
+    assert eng2.submit(r)
+    eng2.run_until_drained()
+    assert eng2.metrics.served == served_before + 1
+    assert eng2.journal.appended > 0
+
+
+# ---------------------------------------------------------------------------
+# dispatch watchdog
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def warm(setup):
+    """Compile every kernel shape the watchdog tests dispatch (batch 4, 2,
+    and singleton splits) so deadlines measure dispatch, not compilation."""
+    p, keysets = setup
+    for nb in (4, 2, 1):
+        store = _store(keysets)
+        eng = FheServeEngine(store, sleeper=lambda s: None)
+        _submit_wave(eng, p, store, list(range(900, 900 + nb)))
+        eng.run_until_drained()
+    return True
+
+
+def test_watchdog_detects_and_retries_scripted_hang(setup, warm):
+    p, keysets = setup
+    plan = faults.FaultPlan(
+        [faults.FaultSpec(site="hang", at=(2,), max_fires=1,
+                          duration=60.0)], seed=3)
+    wd = DispatchWatchdog(deadline=0.4, grace=0.5, escalate_after=3)
+    store = _store(keysets)
+    eng = FheServeEngine(store, watchdog=wd, sleeper=lambda s: None)
+    reqs = _make_wave(p, store, [600, 601, 602, 603])
+    with faults.inject(plan):
+        for r in reqs:
+            assert eng.submit(r)
+        eng.run_until_drained()
+    assert eng.metrics.served == 4
+    assert eng.metrics.hung_dispatches == 1
+    assert wd.timeouts == 1
+    assert eng.metrics.hang_escalations == 0
+    for r in reqs:
+        r.result()                           # no typed failures
+
+
+def test_watchdog_escalates_repeated_hang_to_typed_quarantine(setup, warm):
+    p, keysets = setup
+    # every bconv dispatch hangs: the group can never complete, so after
+    # escalate_after hangs the engine stops retrying and quarantines with
+    # the typed ``hung`` detail instead of stalling the engine forever
+    plan = faults.FaultPlan(
+        [faults.FaultSpec(site="hang", rate=1.0, family="bconv",
+                          duration=60.0)], seed=4)
+    wd = DispatchWatchdog(deadline=0.25, grace=0.5, escalate_after=2)
+    store = _store(keysets)
+    eng = FheServeEngine(store, watchdog=wd, sleeper=lambda s: None)
+    r, _ = standard_request(p, store.keyset("alice"), "alice", seed=700)
+    with faults.inject(plan):
+        eng.submit(r)
+        eng.run_until_drained()
+    assert r.status == "failed"
+    assert r.error.startswith("hung"), r.error
+    assert eng.metrics.hang_escalations >= 1
+    assert eng.metrics.quarantined >= 1
+    assert eng.metrics.hung_dispatches >= 2
+
+
+def test_watchdog_hang_unblocks_before_scatter(setup, warm):
+    """The aborted worker must unwind without publishing anything: the
+    faulted group's registers are untouched, so the retry reads clean
+    state (transactional-scatter invariant across abandonment)."""
+    p, keysets = setup
+    plan = faults.FaultPlan(
+        [faults.FaultSpec(site="hang", at=(0,), max_fires=1,
+                          duration=60.0)], seed=5)
+    wd = DispatchWatchdog(deadline=0.3, grace=0.5)
+    store = _store(keysets)
+    eng = FheServeEngine(store, watchdog=wd, sleeper=lambda s: None)
+    reqs = _make_wave(p, store, [800, 801])
+    with faults.inject(plan):
+        for r in reqs:
+            assert eng.submit(r)
+        eng.run_until_drained()
+    assert eng.metrics.served == 2
+    # the same seeds through an unwatched, fault-free engine agree bit-wise
+    set_rid_counter(50_000)
+    store2 = _store(keysets)
+    eng2 = FheServeEngine(store2, sleeper=lambda s: None)
+    ref = _submit_wave(eng2, p, store2, [800, 801])
+    eng2.run_until_drained()
+    for r_w, r_c in zip(reqs, ref):
+        for k in r_w.outputs:
+            for a, b in zip(_ct_bits(r_w.result()[k]),
+                            _ct_bits(r_c.result()[k])):
+                assert np.array_equal(a, b)
+
+
+def test_dispatch_token_commit_gate():
+    """An abandoned worker's late results hit a closed commit gate."""
+    tok = faults.DispatchToken()
+    tok.abort()
+    with pytest.raises(faults.HungLaunch):
+        with tok.commit():
+            pytest.fail("publication must not run after abort")
+    tok2 = faults.DispatchToken()
+    with tok2.commit():
+        pass                                 # un-aborted gate is open
+
+
+# ---------------------------------------------------------------------------
+# heal resets fault accounting (satellite regression)
+# ---------------------------------------------------------------------------
+
+def test_heal_resets_tenant_fault_accounting(setup):
+    p, keysets = setup
+    store = _store(keysets)
+    eng = FheServeEngine(store, sleeper=lambda s: None)
+    # two consecutive staging faults degrade the tenant
+    plan = faults.FaultPlan(
+        [faults.FaultSpec(site="stage", rate=1.0, max_fires=2)], seed=6)
+    with faults.inject(plan):
+        with pytest.raises(Exception):
+            store.acquire("alice")
+    assert store.is_degraded("alice")
+    assert store.tenant_faults["alice"]["staging_retries"] == 1
+    assert store.tenant_faults["alice"]["degrade_events"] == 1
+    assert eng.metrics.tenant_faults["alice"]["staging_retries"] == 1
+    store.heal("alice")
+    assert not store.is_degraded("alice")
+    assert "alice" not in store.tenant_faults
+    assert "alice" not in eng.metrics.tenant_faults
+    # healed tenant stages cleanly on the next acquire
+    store.acquire("alice")
+    assert store.is_resident("alice")
