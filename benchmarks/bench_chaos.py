@@ -322,9 +322,23 @@ def main(argv=None) -> dict:
                     help="per-launch HANG rates swept under a dispatch "
                          "watchdog (nightly passes 0.01 0.05); empty = "
                          "skip the hang sweep")
+    ap.add_argument("--trace-out", type=Path, default=None, metavar="PATH",
+                    help="also capture one traced chaos scenario and write "
+                         "a Chrome/Perfetto trace.json (nightly artifact)")
     args = ap.parse_args(argv)
     res = run(reps=2 if args.quick else 3, N=args.N, L=args.L,
               rates=tuple(args.rates), hang_rates=tuple(args.hang_rates))
+    if args.trace_out is not None:
+        from repro.runtime import tracing
+        p, store = _setup(args.N, args.L)
+        plan = {"seed": 7,
+                "specs": [{"site": "launch", "rate": max(args.rates)}]}
+        with tracing.capture() as tr:
+            run_scenario(p, store, plan)
+        tr.write_perfetto(args.trace_out)
+        print(f"wrote Perfetto chaos trace ({len(tr.spans)} spans, "
+              f"{sum(tr.fault_fires.values())} fault fires) to "
+              f"{args.trace_out}")
     args.out.write_text(json.dumps(res, indent=1, sort_keys=True) + "\n")
     print(json.dumps(res["gate"], indent=1))
     print(f"wrote {args.out}")

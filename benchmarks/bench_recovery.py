@@ -354,7 +354,26 @@ def main(argv=None) -> dict:
     ap.add_argument("--journal-dir", type=Path, default=None,
                     help="crash-loop artifact root (failing cycles leave "
                          "their journal/snapshots here)")
+    ap.add_argument("--trace-out", type=Path, default=None, metavar="PATH",
+                    help="also capture one traced serving wave and write a "
+                         "Chrome/Perfetto trace.json (nightly artifact)")
     args = ap.parse_args(argv)
+
+    if args.trace_out is not None:
+        from repro.runtime import tracing
+        p, keysets = _setup(args.N, args.L)
+        store = _store(keysets)
+        eng = FheServeEngine(store, max_batch=WAVE, sleeper=lambda d: None)
+        for req, _ in _make_wave(p, store, range(100, 100 + WAVE)):
+            assert eng.submit(req)
+        eng.run_until_drained()                   # warm: compile + stage
+        with tracing.capture() as tr:
+            for req, _ in _make_wave(p, store, range(200, 200 + WAVE)):
+                assert eng.submit(req)
+            eng.run_until_drained()
+        tr.write_perfetto(args.trace_out)
+        print(f"wrote Perfetto serving trace ({len(tr.spans)} spans) to "
+              f"{args.trace_out}")
 
     if args.cycles > 0:
         p, keysets = _setup(args.N, args.L)

@@ -57,6 +57,10 @@ def main() -> None:
                          lambda: bench_recovery.main(
                              ["--quick", "--out",
                               "/tmp/BENCH_recovery.json"])))
+        from benchmarks import bench_obs
+        sections.append(("Observability: tracing overhead + crosscheck",
+                         lambda: bench_obs.main(
+                             ["--quick", "--out", "/tmp/BENCH_obs.json"])))
 
     for title, fn in sections:
         print(f"\n### {title}")

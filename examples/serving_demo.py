@@ -10,13 +10,17 @@ AutoU∘KS launch per tenant's rotation group), keeps each tenant's evks
 device-resident through the key store, and reuses cached plans — zero
 constant uploads once warm.  Decrypted results are checked per tenant.
 """
+import json
+import os
 import sys
+import tempfile
 
 sys.path.insert(0, "src")
 
 import numpy as np
 
 from repro.core import const_cache, encoding as enc, keys as K, params as prm
+from repro.runtime import tracing
 from repro.serve import (FheServeEngine, TenantKeyStore, standard_reference,
                          standard_request)
 
@@ -50,15 +54,44 @@ for req, (z1, z2) in requests:
     assert err < 1e-2, f"req {req.rid}: err {err}"
 print("all decrypted results match plaintext math")
 
-# steady state: a second identical wave stages nothing and builds no plans
+# steady state: a second identical wave stages nothing and builds no plans —
+# traced this time, to show the observability surfaces
 before = const_cache.stage_events()
 misses = engine.plans.misses
-for i in range(8):
-    req, _ = make_request("alice" if i % 2 == 0 else "bob", 300 + i)
-    engine.submit(req)
-engine.run_until_drained()
+with tracing.capture() as tr:
+    for i in range(8):
+        req, _ = make_request("alice" if i % 2 == 0 else "bob", 300 + i)
+        engine.submit(req)
+    engine.run_until_drained()
 uploads = const_cache.stage_events_since(before)
 builds = engine.plans.misses - misses
 print(f"steady-state wave: {uploads} const uploads, {builds} plan builds")
 assert uploads == 0 and builds == 0
+
+# per-request timelines export as a Chrome/Perfetto trace; the span-tree
+# summary is wall-clock-free and identical run to run
+trace_path = os.path.join(tempfile.gettempdir(), "serving_demo_trace.json")
+tr.write_perfetto(trace_path)
+with open(trace_path) as f:
+    doc = json.load(f)
+assert isinstance(doc["traceEvents"], list) and doc["traceEvents"]
+summ = tr.span_summary()
+print(f"traced wave: {len(tr.spans)} spans, "
+      f"{len(doc['traceEvents'])} trace events -> {trace_path}")
+attributed = sum(n for v in summ["spans"].values()
+                 for n in v["launches"].values())
+assert attributed == sum(tr.launches.values())
+assert summ["requests"]["admitted"] == 8 == summ["requests"]["terminal"]["ok"]
+
+# metrics snapshot: deterministic counters + p50/p95/p99 latency histograms,
+# renderable as Prometheus text exposition
+snap = tracing.metrics_snapshot(engine.metrics)
+lat = snap["serve"]["latency"]
+print("latency p50/p95/p99 (s): " + ", ".join(
+    f"{k}={v['p50']:.3g}/{v['p95']:.3g}/{v['p99']:.3g}"
+    for k, v in lat.items()))
+prom = tracing.render_prometheus(snap)
+assert "repro_kernel_launches_total" in prom
+assert "repro_serve_serve_seconds" in prom
+assert lat["serve"]["count"] == 16      # both waves
 print("OK")

@@ -82,6 +82,12 @@ def set_stage_hook(fn) -> None:
     _stage_hook = fn
 
 
+def get_stage_hook():
+    """The currently-installed pre-staging hook (None when clear) — read by
+    consumers that chain through and restore it (fault injection, tracing)."""
+    return _stage_hook
+
+
 def stage_events() -> int:
     """Monotonic count of host→device constant staging transfers.
 

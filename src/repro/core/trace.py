@@ -24,12 +24,27 @@ class OpTrace:
         default_factory=collections.Counter)
     he_ops: collections.Counter = dataclasses.field(
         default_factory=collections.Counter)
+    # kernel-grain mirror: per-family Pallas dispatch counts, fed by
+    # repro.kernels.config.count_launch so an active trace sees EXACTLY the
+    # launches kernels/config tallies on the same workload (the fused/batched
+    # paths dispatch far fewer kernels than the primitive records suggest —
+    # this is the ground truth the cost-model crosscheck reconciles against)
+    launches: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)
+    # record-call events per func (no limb/coeff weighting): the unit
+    # cost_model.predict_launches maps to expected kernel dispatches
+    calls: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)
 
     def add(self, func: str, n_limbs: int, n_coeff: int, count: int = 1):
         self.counts[(func, n_limbs, n_coeff)] += count
+        self.calls[func] += 1
 
     def add_he(self, op: str):
         self.he_ops[op] += 1
+
+    def add_launch(self, family: str, n: int = 1):
+        self.launches[family] += n
 
     # -- aggregates used by the cost model ------------------------------------
     def limb_transforms(self) -> float:
@@ -60,10 +75,15 @@ class OpTrace:
             self.counts[k] += v * times
         for k, v in other.he_ops.items():
             self.he_ops[k] += v * times
+        for k, v in other.launches.items():
+            self.launches[k] += v * times
+        for k, v in other.calls.items():
+            self.calls[k] += v * times
 
     def summary(self) -> dict:
         return {
             "he_ops": dict(self.he_ops),
+            "kernel_launches": dict(self.launches),
             "limb_ntts": self.limb_transforms(),
             "butterflies": self.butterflies(),
             "bconv_macs": self.bconv_macs(),
@@ -103,3 +123,13 @@ def record_he(op: str):
     t = _active.get()
     if t is not None:
         t.add_he(op)
+
+
+def record_launch(family: str, n: int = 1):
+    """Mirror one kernel dispatch into the active trace (called by
+    :func:`repro.kernels.config.count_launch` after the launch hook and the
+    global counters — a faulted launch never reaches this point, so
+    ``OpTrace.launches`` stays equal to the per-region counter deltas)."""
+    t = _active.get()
+    if t is not None:
+        t.add_launch(family, n)

@@ -40,6 +40,8 @@ import collections
 import os
 import warnings
 
+from repro.core import trace as _hetrace
+
 _MODES = ("interpret", "compile", "auto")
 _mode = os.environ.get("REPRO_KERNEL_MODE", "auto")
 if _mode not in _MODES:
@@ -196,6 +198,17 @@ def set_launch_hook(fn) -> None:
     _launch_hook = fn
 
 
+def get_launch_hook():
+    """The currently-installed pre-dispatch hook (None when clear).
+
+    Consumers that wrap the hook (fault injection, tracing) read the
+    previous value here, chain through it, and restore it on exit — a
+    bare ``set_launch_hook(None)`` on exit would silently evict whichever
+    other consumer installed first.
+    """
+    return _launch_hook
+
+
 def count_launch(family: str, n: int = 1, *,
                  interpret: bool | None = None) -> None:
     """Record ``n`` kernel dispatches of the given family ("ntt", "bconv",
@@ -209,6 +222,10 @@ def count_launch(family: str, n: int = 1, *,
         _launch_hook(family, n)
     _launches[family] += n
     _mode_launches[resolved_mode(interpret)][family] += n
+    # mirror into the active OpTrace (contextvar; None-check when inactive)
+    # AFTER the hook: an injected fault raises above, so a launch that never
+    # retired is neither counted here nor in the trace
+    _hetrace.record_launch(family, n)
 
 
 def launch_counts() -> dict:

@@ -15,10 +15,23 @@ import time
 import numpy as np
 
 
+def _write_metrics(path, eng) -> None:
+    """Dump a full metrics snapshot (counters + serve summary + latency
+    histograms) as JSON, atomically enough for a tailing reader."""
+    import json
+
+    from repro.runtime import tracing
+    snap = tracing.metrics_snapshot(eng.metrics)
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
 def main_fhe(args):
     from repro.core import encoding as enc
     from repro.core import keys as K
     from repro.core import params as prm
+    from repro.runtime import tracing
     from repro.serve import (FheServeEngine, TenantKeyStore,
                              standard_reference, standard_request)
 
@@ -33,6 +46,11 @@ def main_fhe(args):
 
     eng = FheServeEngine(store, max_batch=args.batch,
                          batching=not args.no_batching)
+    # --trace-out implies a capture even without REPRO_TRACE=on; an
+    # env-started tracer (tracing.start at import) is reused as-is
+    tracer = None
+    if args.trace_out is not None and not tracing.enabled():
+        tracer = tracing.start()
     reqs = []
     for i in range(args.requests):
         tenant = tenants[i % len(tenants)]
@@ -41,7 +59,16 @@ def main_fhe(args):
         reqs.append((req, z))
     eng.metrics.begin_region()
     t0 = time.time()
-    eng.run_until_drained()
+    if args.metrics_every > 0 and args.metrics_json is not None:
+        # periodic snapshot dump: overwrite the target every N steps so a
+        # watching scraper always reads the freshest state
+        steps = 0
+        while eng.step() or eng.queue:
+            steps += 1
+            if steps % args.metrics_every == 0:
+                _write_metrics(args.metrics_json, eng)
+    else:
+        eng.run_until_drained()
     dt = time.time() - t0
     region = eng.metrics.region()
     print(f"served {len(reqs)} requests in {dt:.2f}s "
@@ -49,6 +76,18 @@ def main_fhe(args):
     print(f"  summary: {eng.summary()}")
     print(f"  kernel launches: {region['kernel_launches']} "
           f"(const uploads {region['const_uploads']})")
+    if args.trace_out is not None:
+        tr = tracing.stop() if tracer is not None else tracing.active_tracer()
+        tr.write_perfetto(args.trace_out)
+        print(f"  wrote Perfetto trace ({len(tr.spans)} spans) to "
+              f"{args.trace_out}")
+    if args.metrics_json is not None:
+        _write_metrics(args.metrics_json, eng)
+        print(f"  wrote metrics snapshot to {args.metrics_json}")
+        lat = eng.metrics.summary()["latency"]
+        print("  latency p50/p95/p99 (s): " + ", ".join(
+            f"{k}={v['p50']:.3g}/{v['p95']:.3g}/{v['p99']:.3g}"
+            for k, v in lat.items()))
     # verify one decrypted result against the plaintext pipeline
     req, (z1, z2) = reqs[0]
     out = req.result()["out"]
@@ -102,6 +141,14 @@ def main():
                     help="sequential baseline (one op per dispatch)")
     ap.add_argument("--N", type=int, default=1 << 10)
     ap.add_argument("--L", type=int, default=4)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace.json of the run")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write a metrics snapshot (counters + latency "
+                         "histograms) as JSON at the end of the run")
+    ap.add_argument("--metrics-every", type=int, default=0, metavar="N",
+                    help="with --metrics-json: also rewrite the snapshot "
+                         "every N engine steps (0 = final only)")
     # lm mode
     ap.add_argument("--arch", default="qwen3_4b")
     ap.add_argument("--slots", type=int, default=4)

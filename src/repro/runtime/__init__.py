@@ -4,9 +4,11 @@ fault-injection framework the FHE serving chaos harness drives."""
 from .driver import DriverConfig, StepDriver
 from .faults import (FaultError, FaultInjector, FaultPlan, FaultSpec,
                      StagingFault, TransientFault, active_injector, inject)
+from . import tracing
+from .tracing import Histogram, Tracer
 
 __all__ = [
     "DriverConfig", "FaultError", "FaultInjector", "FaultPlan", "FaultSpec",
-    "StagingFault", "StepDriver", "TransientFault", "active_injector",
-    "inject",
+    "Histogram", "StagingFault", "StepDriver", "Tracer", "TransientFault",
+    "active_injector", "inject", "tracing",
 ]

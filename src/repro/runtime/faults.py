@@ -316,6 +316,8 @@ class FaultInjector:
         if hit is not None:
             self.fired[site] += 1
             self.fired_log.append((site, idx))
+            if _fire_hook is not None:
+                _fire_hook(site, idx)
         return hit
 
     # -- site hooks ------------------------------------------------------------
@@ -393,6 +395,23 @@ class FaultInjector:
 
 _active: FaultInjector | None = None
 
+# Optional fire notification: called as hook(site, event_index) whenever a
+# fault spec fires, right after the injector logs it — NEVER on the result
+# path, so it cannot perturb retry/replay behavior.  The tracing subsystem
+# (repro.runtime.tracing) attaches fault firings to the enclosing span here.
+_fire_hook = None
+
+
+def set_fire_hook(fn) -> None:
+    """Install (or clear, with None) the fault-fired notification hook."""
+    global _fire_hook
+    _fire_hook = fn
+
+
+def get_fire_hook():
+    """The currently-installed fire hook (None when clear)."""
+    return _fire_hook
+
 
 def active_injector() -> FaultInjector | None:
     """The currently-installed injector (None outside an ``inject`` region)."""
@@ -416,13 +435,40 @@ class inject:
         if _active is not None:
             raise RuntimeError("a fault-injection region is already active")
         _active = self.injector
-        kconfig.set_launch_hook(self.injector.on_launch)
-        const_cache.set_stage_hook(self.injector.on_stage)
+        # chain through any previously-installed hook (the tracer's) instead
+        # of clobbering it.  Injector first: a faulted launch raises before
+        # reaching the chained hook, so the tracer only ever sees dispatches
+        # that actually retired — fault firings reach it via the fire hook.
+        self._prev_launch = kconfig.get_launch_hook()
+        self._prev_stage = const_cache.get_stage_hook()
+        on_launch, prev_launch = self.injector.on_launch, self._prev_launch
+        on_stage, prev_stage = self.injector.on_stage, self._prev_stage
+
+        if prev_launch is None:
+            self._launch_hook = on_launch
+        else:
+            def _launch(family, n):
+                on_launch(family, n)
+                prev_launch(family, n)
+            self._launch_hook = _launch
+        if prev_stage is None:
+            self._stage_hook = on_stage
+        else:
+            def _stage(n):
+                on_stage(n)
+                prev_stage(n)
+            self._stage_hook = _stage
+        kconfig.set_launch_hook(self._launch_hook)
+        const_cache.set_stage_hook(self._stage_hook)
         return self.injector
 
     def __exit__(self, *exc):
         global _active
         _active = None
-        kconfig.set_launch_hook(None)
-        const_cache.set_stage_hook(None)
+        # restore the pre-region hooks — but only if ours are still the ones
+        # installed (a consumer that replaced them mid-region wins)
+        if kconfig.get_launch_hook() is self._launch_hook:
+            kconfig.set_launch_hook(self._prev_launch)
+        if const_cache.get_stage_hook() is self._stage_hook:
+            const_cache.set_stage_hook(self._prev_stage)
         return False

@@ -28,6 +28,7 @@ ops whose destination register aliases a source.
 from __future__ import annotations
 
 from repro.core import ckks
+from repro.runtime import tracing
 
 from .ir import BATCHED_KINDS, KEYED_KINDS as _KEYED_KINDS, FheRequest, HeOp
 from .keystore import TenantKeyStore
@@ -76,8 +77,9 @@ class Batcher:
         """Dispatch one group through its (cached) plan and write results
         back into each request's register file."""
         req, op = group[0]
-        plan = self.plans.get(self.plan_key(group),
-                              lambda: self._build(req, op))
+        with tracing.span("plan", kind=op.kind):
+            plan = self.plans.get(self.plan_key(group),
+                                  lambda: self._build(req, op))
         plan(group)
 
     def plan_key(self, group: list[Item]):
@@ -169,13 +171,14 @@ class Batcher:
         across abandonment."""
         from repro.runtime import faults
         token = faults.current_dispatch_token()
-        if token is None:
-            for (req, op), out in zip(items, outs):
-                req.env[op.dst] = out
-            return
-        with token.commit():
-            for (req, op), out in zip(items, outs):
-                req.env[op.dst] = out
+        with tracing.span("scatter", batch=len(items)):
+            if token is None:
+                for (req, op), out in zip(items, outs):
+                    req.env[op.dst] = out
+                return
+            with token.commit():
+                for (req, op), out in zip(items, outs):
+                    req.env[op.dst] = out
 
     def _exec_pmult(self, items: list[Item]) -> None:
         cts = [req.env[op.srcs[0]] for req, op in items]

@@ -57,7 +57,7 @@ import time
 import numpy as np
 
 from repro.core import guards
-from repro.runtime import faults
+from repro.runtime import faults, tracing
 from repro.runtime.faults import FaultError
 
 from .batcher import Batcher
@@ -116,6 +116,13 @@ class FheServeEngine:
         """Admit a request; False = rejected with a typed reason recorded on
         the request (``status="rejected"``, ``error=<reason>``) and in
         ``metrics.rejected_reasons``."""
+        with tracing.span("admit", tenant=req.tenant):
+            ok = self._admit(req)
+        if ok:
+            tracing.request_event("admit", req.rid, tenant=req.tenant)
+        return ok
+
+    def _admit(self, req: FheRequest) -> bool:
         try:
             ks = self.keystore.keyset(req.tenant)
         except KeyError:
@@ -159,10 +166,11 @@ class FheServeEngine:
         req.status = "ok"
         req.finished_at = now
         self.metrics.served += 1
-        self.metrics.serve_time += now - req.admitted_at
+        self.metrics.observe_serve(now - req.admitted_at)
         if req.finished_at > req.deadline:
             self.metrics.missed_deadlines += 1
         self.completed.append(req)
+        tracing.request_event("terminal", req.rid, status="ok")
 
     def _fail(self, req: FheRequest, status: str, reason: str,
               now: float) -> None:
@@ -179,6 +187,8 @@ class FheServeEngine:
         else:
             self.metrics.failed += 1
         self.failed.append(req)
+        tracing.request_event("terminal", req.rid, status=status,
+                              reason=reason)
 
     # -- engine loop ----------------------------------------------------------
 
@@ -221,7 +231,8 @@ class FheServeEngine:
             try:
                 if not self.keystore.is_degraded(req.tenant) or any(
                         op.kind in KEYED_KINDS for op in req.program):
-                    self.keystore.acquire(req.tenant)
+                    with tracing.span("stage", tenant=req.tenant):
+                        self.keystore.acquire(req.tenant)
             except TenantDegraded:
                 self._fail(req, "failed", "tenant_degraded", self._clock())
                 continue
@@ -229,7 +240,8 @@ class FheServeEngine:
             req.started_at = self._clock()
             req.env = dict(req.inputs)
             req.pc = 0
-            self.metrics.wait_time += req.started_at - req.admitted_at
+            tracing.request_event("start", req.rid)
+            self.metrics.observe_wait(req.started_at - req.admitted_at)
             if not req.program:             # nothing to run: retire directly
                 self._finish(req, req.started_at)
                 continue
@@ -253,12 +265,18 @@ class FheServeEngine:
         """
         attempt = 0
         hangs = 0
+        kind = group[0][1].kind
         while True:
             try:
-                if self.watchdog is not None:
-                    self.watchdog.run(lambda: self.batcher.execute(group))
-                else:
-                    self.batcher.execute(group)
+                with tracing.span(f"dispatch.{kind}", batch=len(group),
+                                  attempt=attempt):
+                    t0 = time.perf_counter()
+                    if self.watchdog is not None:
+                        self.watchdog.run(lambda: self.batcher.execute(group))
+                    else:
+                        self.batcher.execute(group)
+                    self.metrics.observe_dispatch(time.perf_counter() - t0)
+                    tracing.annotate("ops", len(group))
                 self.metrics.groups_dispatched += 1
                 self.metrics.ops_executed += len(group)
                 if len(group) >= 2:
@@ -297,6 +315,7 @@ class FheServeEngine:
         self.metrics.backoff_time += delay
         self._sleep(delay)
         self.metrics.retries += 1
+        tracing.event("retry", attempt=attempt, batch=len(group))
         for req, _ in group:
             req.attempts += 1
 
@@ -343,6 +362,10 @@ class FheServeEngine:
 
     def step(self) -> int:
         """One serving iteration; returns the number of ops attempted."""
+        with tracing.span("step"):
+            return self._step()
+
+    def _step(self) -> int:
         # write-ahead: the record commits the *intent* to run this step, so
         # a crash anywhere inside it replays the whole step from the same
         # pre-step state and lands in the same post-step state

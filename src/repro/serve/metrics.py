@@ -13,6 +13,7 @@ import dataclasses
 
 from repro.core import const_cache
 from repro.kernels import config as kconfig
+from repro.runtime.tracing import Histogram
 
 
 @dataclasses.dataclass
@@ -27,6 +28,17 @@ class ServeMetrics:
     ops_batched: int = 0                 # ops that shared a group of size ≥ 2
     wait_time: float = 0.0               # admission → first execution
     serve_time: float = 0.0              # admission → completion
+    # streaming latency distributions (p50/p95/p99 in summary()).  wait/serve
+    # observe engine-clock durations — deterministic under a LogicalClock, so
+    # they round-trip through recovery state.  dispatch observes WALL seconds
+    # per group dispatch and is process-local (excluded from state_dict, like
+    # the launch/stage region snapshots).
+    wait_hist: Histogram = dataclasses.field(default_factory=Histogram,
+                                             repr=False)
+    serve_hist: Histogram = dataclasses.field(default_factory=Histogram,
+                                              repr=False)
+    dispatch_hist: Histogram = dataclasses.field(default_factory=Histogram,
+                                                 repr=False)
 
     # -- resilience (see repro.serve.resilience / repro.runtime.faults) ------
     failed: int = 0                      # terminal non-timeout failures
@@ -47,6 +59,23 @@ class ServeMetrics:
     # faults, backoff) — reset by TenantKeyStore.heal() so a healed tenant
     # does not inherit stale fault pressure
     tenant_faults: dict = dataclasses.field(default_factory=dict)
+
+    def observe_wait(self, dt: float) -> None:
+        self.wait_time += dt
+        self.wait_hist.observe(dt)
+
+    def observe_serve(self, dt: float) -> None:
+        self.serve_time += dt
+        self.serve_hist.observe(dt)
+
+    def observe_dispatch(self, dt: float) -> None:
+        self.dispatch_hist.observe(dt)
+
+    def histograms(self) -> dict:
+        """Name → :class:`~repro.runtime.tracing.Histogram` (the
+        metrics-snapshot / Prometheus export surface)."""
+        return {"wait": self.wait_hist, "serve": self.serve_hist,
+                "dispatch": self.dispatch_hist}
 
     def reject(self, reason: str) -> None:
         self.rejected += 1
@@ -91,6 +120,8 @@ class ServeMetrics:
             "ops_batched": self.ops_batched,
             "mean_wait": self.wait_time / max(1, self.served),
             "mean_serve_time": self.serve_time / max(1, self.served),
+            "latency": {name: h.summary()
+                        for name, h in self.histograms().items()},
             "failed": self.failed,
             "timed_out": self.timed_out,
             "deadline_missed_at_pop": self.deadline_missed_at_pop,
@@ -127,11 +158,14 @@ class ServeMetrics:
 
     def state_dict(self) -> dict:
         """All request-accounting counters (the launch/stage region
-        snapshots are process-local and deliberately excluded)."""
+        snapshots — and the wall-clock dispatch histogram — are
+        process-local and deliberately excluded)."""
         out = {f: getattr(self, f) for f in self._STATE_FIELDS}
         out["rejected_reasons"] = dict(self.rejected_reasons)
         out["tenant_faults"] = {t: dict(h)
                                 for t, h in self.tenant_faults.items()}
+        out["histograms"] = {"wait": self.wait_hist.state_dict(),
+                             "serve": self.serve_hist.state_dict()}
         return out
 
     def load_state(self, state: dict) -> None:
@@ -140,3 +174,9 @@ class ServeMetrics:
         self.rejected_reasons = dict(state["rejected_reasons"])
         self.tenant_faults = {t: dict(h)
                               for t, h in state["tenant_faults"].items()}
+        # histograms arrived with the crash-safe-serving PR's successor;
+        # older snapshots on disk simply lack the key — keep fresh ones
+        hists = state.get("histograms")
+        if hists is not None:
+            self.wait_hist = Histogram.from_state(hists["wait"])
+            self.serve_hist = Histogram.from_state(hists["serve"])

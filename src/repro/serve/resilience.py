@@ -32,12 +32,13 @@ Two concerns live here, both deterministic and unit-testable in isolation:
 """
 from __future__ import annotations
 
+import contextvars
 import dataclasses
 import threading
 
 import numpy as np
 
-from repro.runtime import faults
+from repro.runtime import faults, tracing
 from repro.runtime.faults import FaultError
 
 HEALTHY = "healthy"
@@ -164,11 +165,16 @@ class DispatchWatchdog:
         token = faults.begin_dispatch()
         done = threading.Event()
         err: list[BaseException] = []
+        # snapshot the caller's contextvars so the worker sees the enclosing
+        # tracing span (contextvars do NOT propagate to threads by default);
+        # spans the worker opens live and die inside the copy — no leakage
+        # back into the engine thread
+        ctx = contextvars.copy_context()
 
         def worker():
             faults.bind_dispatch_token(token)
             try:
-                fn()
+                ctx.run(fn)
             except BaseException as e:       # noqa: BLE001 — relayed below
                 err.append(e)
             finally:
@@ -189,14 +195,17 @@ class DispatchWatchdog:
                     # scattered group would double-apply aliasing ops, so
                     # this is a slow dispatch, not a hang
                     self.slow_dispatches += 1
+                    tracing.event("watchdog.slow")
                     return
                 self.timeouts += 1
                 if not finished:
                     self.abandoned_workers += 1
+                tracing.event("watchdog.timeout", abandoned=not finished)
                 raise DispatchHung(
                     f"dispatch exceeded {self.deadline}s watchdog deadline")
             if time.monotonic() - t0 > self.deadline:
                 self.slow_dispatches += 1
+                tracing.event("watchdog.slow")
             if err:
                 raise err[0]
         finally:

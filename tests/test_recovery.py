@@ -459,7 +459,11 @@ def test_watchdog_hang_unblocks_before_scatter(setup, warm):
     plan = faults.FaultPlan(
         [faults.FaultSpec(site="hang", at=(0,), max_fires=1,
                           duration=60.0)], seed=5)
-    wd = DispatchWatchdog(deadline=0.3, grace=0.5)
+    # the scripted hang is 60 s, so a wide deadline detects it just as
+    # surely — but the exact `served == 2` below cannot survive a spurious
+    # trip, and warm singleton dispatches on a loaded CPU box run ~0.25 s,
+    # right under the old 0.3 s deadline.
+    wd = DispatchWatchdog(deadline=1.5, grace=0.5)
     store = _store(keysets)
     eng = FheServeEngine(store, watchdog=wd, sleeper=lambda s: None)
     reqs = _make_wave(p, store, [800, 801])
