@@ -1,0 +1,122 @@
+"""Chiplet-scale sharded execution: scaling curve + structural gates
+(EXPERIMENTS.md §Distributed).
+
+Sweeps simulated package sizes (1 → 8 chips via fresh subprocesses with
+``--xla_force_host_platform_device_count``) and, at each size, runs the
+``dist_scope`` production pipeline — hmult → rescale → hoisted rotations —
+under the representative square-ish cluster map, via
+``repro.core._dist_selftest bench``.  Each point reports:
+
+  * bit-exactness of the sharded pipeline vs the single-device engines
+    (mult / rotations / decrypt) — the correctness gate;
+  * the program-grain collective tally of one pipeline pass (what
+    ``cost_model.predict_collectives`` predicted, and what dispatched);
+  * the compiled-HLO all-to-all count of the four-step NTT program — the
+    §III-B claim that the whole transform needs exactly ONE exchange;
+  * wall-clock per pipeline pass and per batched NTT (informational only:
+    fake CPU devices time-slice one host, so the curve measures sharding
+    overhead, not chiplet speedup).
+
+The ``gate`` section is deterministic (booleans + op counts + provenance
+strings); CI enforces it against the committed ``BENCH_distributed.json``.
+
+    PYTHONPATH=src python -m benchmarks.bench_distributed [--quick] [--out PATH]
+"""
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+from benchmarks.bench_env import gate_env, run_env
+from repro.launch.subproc import run_with_devices
+
+DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_distributed.json"
+
+
+def reference_digests(N):
+    """Single-device pipeline digests, computed ONCE in this (1-device)
+    process and compared against every mesh point's digests — each bench
+    subprocess recomputing the reference would dominate the sweep."""
+    from repro.core import ckks, keys, params as prm
+    from repro.core._dist_selftest import _make_inputs, pipeline_digests
+
+    p = prm.make_params(N=N, L=8, K=2, dnum=4)
+    ks, ct1, ct2 = _make_inputs(p)
+    mult = ckks.rescale(ckks.hmult(ct1, ct2, ks), p)
+    rots = ckks.hrot_hoisted(mult, [1, 2], ks)
+    return pipeline_digests(mult, rots, keys.decrypt(mult, ks.sk))
+
+
+def sweep(meshes, N, reps, ref):
+    points = []
+    for n_dev in meshes:
+        out = run_with_devices(n_dev, "repro.core._dist_selftest",
+                               str(n_dev), "bench", str(N), str(reps))
+        out["exact"] = out["digests"] == ref
+        print(f"  {n_dev} dev ({out['map']}): "
+              f"exact={out['exact']} "
+              f"a2a/ntt={out['ntt_a2a_per_transform']} "
+              f"pipeline={out['pipeline_ms']:.0f} ms "
+              f"ntt={out['ntt_ms']:.2f} ms", flush=True)
+        points.append(out)
+    return points
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller N and fewer reps (same mesh sweep: the "
+                         "gate section must be identical in both modes)")
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    ap.add_argument("--reps", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    meshes = [1, 2, 4, 8]
+    N = 512 if args.quick else 1024
+    if args.reps is None:
+        args.reps = 2 if args.quick else 3
+    print(f"distributed scaling sweep: meshes={meshes} N={N}", flush=True)
+    ref = reference_digests(N)
+    points = sweep(meshes, N, args.reps, ref)
+
+    gate = {
+        **gate_env(),
+        # the mesh shapes themselves are part of the contract: a sweep that
+        # silently stops exercising the 8-chip package must fail the gate
+        "meshes": ",".join(str(p["n_dev"]) for p in points),
+    }
+    for p in points:
+        n = p["n_dev"]
+        gate[f"exact_mesh{n}"] = bool(p["exact"])
+        # §III-B: the four-step dataflow needs exactly one all-to-all per
+        # transform (zero in the single-chip degenerate case)
+        gate[f"ntt_single_exchange_mesh{n}"] = bool(p["ntt_single_exchange"])
+        # program-grain collective count of one full pipeline pass — op
+        # counts are deterministic, so any growth is a dispatch regression
+        coll = p["collectives"]
+        gate[f"pipeline_a2a_mesh{n}"] = int(coll.get("all_to_all", 0))
+        gate[f"pipeline_gather_mesh{n}"] = int(coll.get("all_gather", 0))
+
+    result = {
+        "bench": "distributed",
+        "config": {"quick": args.quick, "meshes": meshes, "N": N,
+                   "reps": args.reps},
+        "env": run_env(),
+        "scaling": [
+            {"n_dev": p["n_dev"], "map": p["map"],
+             "pipeline_ms": round(p["pipeline_ms"], 2),
+             "ntt_ms": round(p["ntt_ms"], 3),
+             "collectives": p["collectives"]}
+            for p in points
+        ],
+        "gate": gate,
+    }
+    args.out.write_text(json.dumps(result, indent=1) + "\n")
+    print(json.dumps(result["gate"], indent=1))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

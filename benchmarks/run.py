@@ -61,6 +61,11 @@ def main() -> None:
         sections.append(("Observability: tracing overhead + crosscheck",
                          lambda: bench_obs.main(
                              ["--quick", "--out", "/tmp/BENCH_obs.json"])))
+        from benchmarks import bench_distributed
+        sections.append(("Distributed scaling (1-8 chips, measured)",
+                         lambda: bench_distributed.main(
+                             ["--quick", "--out",
+                              "/tmp/BENCH_distributed.json"])))
 
     for title, fn in sections:
         print(f"\n### {title}")

@@ -161,6 +161,11 @@ def bconv_raw(x, src: tuple[int, ...], dst: tuple[int, ...],
     kernel wrapper — the eager engine has no launch knobs and ignores them.
     """
     src, dst = tuple(src), tuple(dst)
+    from . import distributed as dist  # lazy: distributed imports this module
+    ctx = dist.dist_active()
+    if ctx is not None:
+        _record(x, src, dst)
+        return dist.sharded_bconv(ctx, x, src, dst)
     if _engine == "eager" or _active_policy.get() is not None:
         return bconv_raw_eager(x, src, dst)
     _record(x, src, dst)

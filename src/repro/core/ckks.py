@@ -77,7 +77,14 @@ class use_engine:
 
 
 def _use_fused() -> bool:
-    return _engine == "fused" and not bc.policy_active()
+    if _engine != "fused" or bc.policy_active():
+        return False
+    # under an active dist_scope the eager decomposition is the distributed
+    # path: every primitive it touches (RnsPoly NTT/automorphism, bconv_raw)
+    # dispatches inside shard_map, whereas the fused Pallas kernels assume
+    # single-device natural-order operands.
+    from . import distributed as dist
+    return dist.dist_active() is None
 
 
 def _evk_at_level(evk: EvalKey, params: CkksParams,

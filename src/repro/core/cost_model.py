@@ -186,6 +186,72 @@ def nop_traffic(trace: OpTrace, cm: ClusterMap,
     }
 
 
+def bconv_method(cm: ClusterMap, n_in: int, n_out: int, *,
+                 N: int | None = None, limb_dup: str = "auto") -> str:
+    """Which BConv mapping a ClusterMap runs: "ark" | "limbdup" | "local".
+
+    The Eq. 3 choice (duplication wins iff n_out − n_in·(L_c−1) > 0) plus
+    the divisibility preconditions of each shard_map program:
+
+    * "local" — L_c ≤ 1 (pure coefficient scattering: every core already
+      holds all limbs of its coefficient slice) or the dst-limb count does
+      not split over the limb clusters.  Zero collectives.
+    * "ark"   — needs n_in, n_out AND the per-core coefficient count N/cs
+      all divisible by L_c (both all-to-alls tile evenly).
+    * "limbdup" — needs only n_out % L_c == 0; doubles as the fallback
+      when Eq. 3 prefers ARK but ARK's divisibility fails.
+
+    This is the single decision point — ``repro.core.distributed`` dispatches
+    through it and :func:`predict_collectives` predicts from it, so the
+    executed collectives and the model's prediction cannot diverge.
+    (Eq. 3 itself is duplicated from ``distributed.limbdup_beneficial``;
+    importing it here would be a circular import.)
+    """
+    lc = cm.coef_cluster_size
+    if lc <= 1 or n_out % lc:
+        return "local"
+    ark_ok = (n_in % lc == 0
+              and (N is None or (N // cm.block_size) % lc == 0))
+    dup = limb_dup == "on" or (limb_dup == "auto"
+                               and n_out - n_in * (lc - 1) > 0)  # Eq. 3
+    if dup or not ark_ok:
+        return "limbdup"
+    return "ark"
+
+
+def predict_collectives(op: str, cm: ClusterMap, *, n_in: int = 0,
+                        n_out: int = 0, N: int | None = None,
+                        limb_dup: str = "auto") -> dict:
+    """Expected collective count per primitive dispatch under a ClusterMap.
+
+    Returns ``{kind: count}`` with kinds "all_to_all" / "all_gather" —
+    exactly what ``repro.kernels.config.collective_counts`` tallies when the
+    distributed engine executes the op, and what the HLO of the compiled
+    shard_map program contains (asserted by tests/test_distributed.py):
+
+    * "ntt"/"intt" — ONE mid-transform all-to-all along "coef" (§III-B);
+      none on a single-core limb cluster.
+    * "auto"       — ONE all-gather across the limb cluster (the slot
+      permutation reaches every core's coefficients).
+    * "bconv"      — per :func:`bconv_method`: ARK pays 2 all-to-alls along
+      "limb"; limb duplication 1 all-gather (none when the input limbs
+      don't split over "limb" — they are then already replicated); local 0.
+    """
+    cs, lc = cm.block_size, cm.coef_cluster_size
+    if op in ("ntt", "intt"):
+        return {"all_to_all": 1} if cs > 1 else {}
+    if op == "auto":
+        return {"all_gather": 1} if cs > 1 else {}
+    if op == "bconv":
+        m = bconv_method(cm, n_in, n_out, N=N, limb_dup=limb_dup)
+        if m == "ark":
+            return {"all_to_all": 2}
+        if m == "limbdup" and n_in % lc == 0:
+            return {"all_gather": 1}
+        return {}
+    raise ValueError(f"unknown primitive {op!r}")
+
+
 def predict_launches(trace: OpTrace) -> dict:
     """First-order kernel-dispatch prediction per family from primitive
     records — the analytic half of the observability crosscheck

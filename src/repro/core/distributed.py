@@ -31,9 +31,10 @@ Two complementary renditions of the paper's data-mapping methodology:
 """
 from __future__ import annotations
 
+import contextvars
 import dataclasses
 import functools
-from typing import Callable
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -42,18 +43,35 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from . import bconv as bc
+from . import const_cache
+from . import cost_model as _cost
 from . import modmath as mm
 from . import ntt as nttm
 from . import rns
 from .mapping import ClusterMap
+from repro.kernels import config as _kcfg
 
 POLY_SPEC = P("limb", "coef")
 
 # ``jax.shard_map`` graduated from ``jax.experimental.shard_map`` in newer
-# releases (renaming ``check_rep`` → ``check_vma`` along the way); resolve
-# whichever the pinned version provides once at import.
+# releases (renaming ``check_rep`` → ``check_vma`` along the way).  Resolve
+# once at import — by SIGNATURE, not by version guess: intermediate releases
+# expose ``jax.shard_map`` while still spelling the kwarg ``check_rep``, and
+# a bare ``jax.shard_map`` alias would then die with a TypeError at every
+# call site that passes ``check_vma``.  Every branch accepts ``check_vma``
+# and forwards it to whatever the installed jax calls it, so replication
+# checking can never silently flip off under nightly drift
+# (pinned by tests/test_distributed.py::test_shard_map_shim_signature).
 if hasattr(jax, "shard_map"):
-    shard_map = jax.shard_map
+    import inspect as _inspect
+
+    if "check_vma" in _inspect.signature(jax.shard_map).parameters:
+        shard_map = jax.shard_map
+    else:  # jax.shard_map exists but predates the kwarg rename
+
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check_vma)
 else:  # jax 0.4.x
     from jax.experimental.shard_map import shard_map as _shard_map_04x
 
@@ -63,16 +81,17 @@ else:  # jax 0.4.x
 
 
 def _axis_size(mesh, name: str) -> int:
-    """Static mesh-axis size inside a shard_map body, version-portable.
+    """Static mesh-axis size, valid inside OR outside a mapped body.
 
-    ``lax.axis_size`` only exists on newer jax; the mesh the program was
-    built against gives the same (static) answer on every version — and the
-    reshape arithmetic in the four-step NTT needs a Python int, not a traced
-    value, so the dynamic ``psum(1, axis)`` fallback is not an option.
+    ``lax.axis_size`` looks tempting but is only legal *inside* a mapped
+    body (it raises a NameError-like binding failure outside one on newer
+    jax, and does not exist at all on 0.4.x).  The mesh the program was
+    built against gives the same static Python int on every version and in
+    every context — and the reshape arithmetic in the four-step NTT needs a
+    Python int, not a traced value, so the dynamic ``psum(1, axis)``
+    fallback is not an option either.
     """
-    if hasattr(lax, "axis_size"):
-        return lax.axis_size(name)
-    return mesh.shape[name]
+    return int(mesh.shape[name])
 
 
 def mesh_context(mesh):
@@ -121,9 +140,24 @@ def dist_ntt(mesh, basis: tuple[int, ...], N: int, forward: bool = True):
     return sm, _local_consts(c)
 
 
+@functools.lru_cache(maxsize=None)
+def _dist_ntt_prog(mesh, basis, N, forward):
+    """jit-compiled (and cached) baseline program.
+
+    This was the tier-1 slow-test bug: the run_* helpers rebuilt the
+    shard_map on every call and dispatched it EAGERLY, so each op in the
+    body (including the interpret-mode Pallas NTT) went through the
+    shard_map interpreter per device — ~15 s per transform at 8 fake
+    devices.  One jitted program per (mesh, basis, N, direction) brings a
+    call down to milliseconds without changing any semantics.
+    """
+    sm, consts = dist_ntt(mesh, basis, N, forward)
+    return jax.jit(sm), consts
+
+
 def run_dist_ntt(mesh, x, basis: tuple[int, ...], forward: bool = True):
-    sm, consts = dist_ntt(mesh, basis, x.shape[-1], forward)
-    return sm(x, *consts)
+    fn, consts = _dist_ntt_prog(mesh, tuple(basis), x.shape[-1], forward)
+    return fn(x, *consts)
 
 
 def dist_ntt_fourstep(mesh, basis: tuple[int, ...], N: int, R: int,
@@ -199,9 +233,17 @@ def dist_ntt_fourstep(mesh, basis: tuple[int, ...], N: int, R: int,
     return sm, consts
 
 
+@functools.lru_cache(maxsize=None)
+def _dist_ntt_fourstep_prog(mesh, basis, N, R, forward):
+    """jit-compiled (and cached) four-step program — see :func:`_dist_ntt_prog`."""
+    sm, consts = dist_ntt_fourstep(mesh, basis, N, R, forward)
+    return jax.jit(sm), consts
+
+
 def run_dist_ntt_fourstep(mesh, x, basis, R, forward=True):
-    sm, consts = dist_ntt_fourstep(mesh, basis, x.shape[-1], R, forward)
-    return sm(x, *consts)
+    fn, consts = _dist_ntt_fourstep_prog(mesh, tuple(basis), x.shape[-1], R,
+                                         forward)
+    return fn(x, *consts)
 
 
 def ntt_layout_perm(N: int, R: int) -> np.ndarray:
@@ -254,11 +296,12 @@ def _scaled_input(x, src: tuple[int, ...], dst: tuple[int, ...], N: int):
     return t, tab
 
 
-def dist_bconv_ark(mesh, x, src: tuple[int, ...], dst: tuple[int, ...]):
-    """ARK §V-A: a2a to coefficient scattering → full-table matmul → a2a back."""
-    N = x.shape[-1]
-    t, tab = _scaled_input(x, src, dst, N)   # q̂⁻¹ scaling is limb-local (sharded)
-    cd = nttm.stacked_ntt_consts(tuple(dst), N)
+@functools.lru_cache(maxsize=None)
+def _ark_prog(mesh, src, dst, N):
+    """jit-compiled (cached) ARK program + its staged table operands —
+    see :func:`_dist_ntt_prog` for why the jit matters."""
+    tab = rns.bconv_tables(src, dst)
+    cd = nttm.stacked_ntt_consts(dst, N)
 
     def fn(t_loc, table, table_s, qd, mu_hi, mu_lo):
         t_all = lax.all_to_all(t_loc, "limb", split_axis=1, concat_axis=0,
@@ -271,20 +314,28 @@ def dist_bconv_ark(mesh, x, src: tuple[int, ...], dst: tuple[int, ...]):
         fn, mesh=mesh,
         in_specs=(POLY_SPEC, P(None), P(None), P(None), P(None), P(None)),
         out_specs=POLY_SPEC, check_vma=False)
-    return sm(t, jnp.asarray(tab.table), jnp.asarray(tab.table_shoup),
-              jnp.asarray(cd.q), jnp.asarray(cd.mu_hi), jnp.asarray(cd.mu_lo))
+    return jax.jit(sm), (jnp.asarray(tab.table), jnp.asarray(tab.table_shoup),
+                         jnp.asarray(cd.q), jnp.asarray(cd.mu_hi),
+                         jnp.asarray(cd.mu_lo))
 
 
-def dist_bconv_limbdup(mesh, x, src: tuple[int, ...], dst: tuple[int, ...]):
-    """Limb duplication §V-A: all-gather inputs, local partial-table matmul,
-    NO output redistribution (outputs are born on their owner)."""
+def dist_bconv_ark(mesh, x, src: tuple[int, ...], dst: tuple[int, ...]):
+    """ARK §V-A: a2a to coefficient scattering → full-table matmul → a2a back."""
     N = x.shape[-1]
+    t, _ = _scaled_input(x, src, dst, N)   # q̂⁻¹ scaling is limb-local (sharded)
+    fn, consts = _ark_prog(mesh, tuple(src), tuple(dst), N)
+    return fn(t, *consts)
+
+
+@functools.lru_cache(maxsize=None)
+def _limbdup_prog(mesh, src, dst, N):
+    """jit-compiled (cached) limb-duplication program + staged operands."""
     K = len(dst)
     L_c = mesh.shape["limb"]
     assert K % L_c == 0, "dst primes must split evenly over limb clusters"
     K_loc = K // L_c
-    t, tab = _scaled_input(x, src, dst, N)
-    cd = nttm.stacked_ntt_consts(tuple(dst), N)
+    tab = rns.bconv_tables(src, dst)
+    cd = nttm.stacked_ntt_consts(dst, N)
 
     def fn(t_loc, table, table_s, qd, mu_hi, mu_lo):
         t_full = lax.all_gather(t_loc, "limb", axis=0, tiled=True)  # broadcast
@@ -297,8 +348,18 @@ def dist_bconv_limbdup(mesh, x, src: tuple[int, ...], dst: tuple[int, ...]):
         fn, mesh=mesh,
         in_specs=(POLY_SPEC, P(None), P(None), P(None), P(None), P(None)),
         out_specs=POLY_SPEC, check_vma=False)
-    return sm(t, jnp.asarray(tab.table), jnp.asarray(tab.table_shoup),
-              jnp.asarray(cd.q), jnp.asarray(cd.mu_hi), jnp.asarray(cd.mu_lo))
+    return jax.jit(sm), (jnp.asarray(tab.table), jnp.asarray(tab.table_shoup),
+                         jnp.asarray(cd.q), jnp.asarray(cd.mu_hi),
+                         jnp.asarray(cd.mu_lo))
+
+
+def dist_bconv_limbdup(mesh, x, src: tuple[int, ...], dst: tuple[int, ...]):
+    """Limb duplication §V-A: all-gather inputs, local partial-table matmul,
+    NO output redistribution (outputs are born on their owner)."""
+    N = x.shape[-1]
+    t, _ = _scaled_input(x, src, dst, N)
+    fn, consts = _limbdup_prog(mesh, tuple(src), tuple(dst), N)
+    return fn(t, *consts)
 
 
 def limbdup_beneficial(n_in_limbs: int, n_out_limbs: int, cm: ClusterMap) -> bool:
@@ -347,3 +408,385 @@ def mapped_bconv(mesh, policy: MappingPolicy, x, src, dst):
                      jnp.asarray(cd.mu_lo)[:, 0])
     return lax.with_sharding_constraint(
         out, NamedSharding(mesh, policy.bconv_output(mesh)))
+
+
+# ----------------------------------------------------------------------------
+# dist_scope: the production sharded engine (paper §IV–§V end to end)
+#
+# Under ``with dist_scope(cluster_map):`` the batched production pipeline —
+# RnsPoly NTT/iNTT, bconv_raw (ModUp/ModDown/rescale), and the eager
+# rotation/key-switch paths that ride them — dispatches inside shard_map over
+# the ("limb", "coef") mesh with the paper's mappings:
+#
+#   * NTT/iNTT   → four-step dataflow, ONE mid-transform all-to-all along
+#                  "coef" (§III-B), limbs split over "limb" when divisible;
+#   * BConv      → ARK redistribution (2 all-to-alls along "limb") or limb
+#                  duplication (1 all-gather, no output collective), chosen
+#                  per Eq. 3 via cost_model.bconv_method;
+#   * automorphism → slot-parallel: 1 all-gather along "coef" plus a local
+#                  gather through the layout-conjugated perm table.
+#
+# Data inside the scope lives in the four-step layouts (coefficient domain:
+# :func:`coef_layout_perm`; NTT domain: :func:`ntt_layout_perm`) — that is
+# what makes ONE exchange per transform possible; converting back to natural
+# order every call would inherently cost a second all-to-all.  Ciphertexts
+# and keys cross the boundary through :func:`shard_ciphertext` /
+# :func:`shard_keyset` (in) and :func:`unshard_ciphertext` (out); results
+# are bit-exact against the single-device engines.  Every dispatch reports
+# its collectives to ``repro.kernels.config.count_collective`` with counts
+# that must (and, in tests, do) match ``cost_model.predict_collectives``.
+# ----------------------------------------------------------------------------
+
+_dist_var: contextvars.ContextVar = contextvars.ContextVar(
+    "dist_ctx", default=None)
+
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    """An active cluster map + mesh pair (what :func:`dist_active` returns)."""
+    cm: ClusterMap
+    mesh: Any
+
+    @property
+    def cs(self) -> int:
+        """Cores per limb cluster = "coef" axis size = block size."""
+        return self.cm.block_size
+
+    @property
+    def lc(self) -> int:
+        """Limb-cluster count = "limb" axis size = coefficient-cluster size."""
+        return self.cm.n_limb_clusters
+
+    def submodules(self, N: int) -> int:
+        """Four-step R for this N: balanced √N, grown until the single-
+        exchange dataflow divides (R % cs == 0 and C % cs == 0)."""
+        R = max(nttm.balanced_submodules(N), self.cs)
+        while R < N and (N // R) % self.cs:
+            R *= 2
+        if R >= N or R % self.cs or (N // R) % self.cs:
+            raise ValueError(
+                f"block size {self.cs} too large for N={N}: no R×C split "
+                f"with R % {self.cs} == 0 and C % {self.cs} == 0")
+        return R
+
+    def limb_sharded(self, ell: int) -> bool:
+        """Whether an ℓ-limb operand splits evenly over the "limb" axis.
+        When it doesn't (rescale drops one limb at a time, so mid-pipeline
+        ℓ is frequently indivisible), the operand is replicated along "limb"
+        — correct, with the compute redundancy confined to that op."""
+        return self.lc == 1 or ell % self.lc == 0
+
+
+class dist_scope:
+    """Activate the sharded production engine for a ClusterMap (or its
+    string notation, e.g. ``"2x4-BK-1x2"``).  Mirrors the engine-scope idiom
+    of ``bconv.mapping_scope`` / ``ckks.use_engine``::
+
+        with dist_scope("2x4-BK-1x2") as ctx:
+            dk = shard_keyset(keys, ctx)
+            dct = shard_ciphertext(ct, ctx)
+            out = unshard_ciphertext(ckks.hmult(dct, dct2, dk), ctx)
+
+    Requires exactly ``cm.n_cores`` jax devices (run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` on CPU).
+    """
+
+    def __init__(self, cm: ClusterMap | str, mesh=None):
+        if isinstance(cm, str):
+            cm = ClusterMap.parse(cm)
+        self.ctx = DistContext(cm=cm,
+                               mesh=mesh if mesh is not None else cm.make_mesh())
+
+    def __enter__(self) -> DistContext:
+        self._tok = _dist_var.set(self.ctx)
+        return self.ctx
+
+    def __exit__(self, *exc):
+        _dist_var.reset(self._tok)
+        return False
+
+
+def dist_active() -> DistContext | None:
+    """The innermost active :class:`dist_scope` context (None outside one)."""
+    return _dist_var.get()
+
+
+def _require() -> DistContext:
+    ctx = _dist_var.get()
+    if ctx is None:
+        raise RuntimeError("no dist_scope is active")
+    return ctx
+
+
+# -- scope-boundary layout conversion ----------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def dist_layout(N: int, R: int, cs: int, domain: str):
+    """(perm, inverse) for the scope's storage layout of one domain.
+
+    ``layout_data[..., p] = natural_data[..., perm[p]]``; coefficient-domain
+    polys live in :func:`coef_layout_perm`, NTT-domain polys in
+    :func:`ntt_layout_perm` (k₁-sharded).
+    """
+    perm = (ntt_layout_perm(N, R) if domain == "ntt"
+            else coef_layout_perm(N, R, cs))
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(N, dtype=np.int32)
+    return perm, inv
+
+
+def _poly_spec(ndim: int, ell: int, ctx: DistContext) -> P:
+    limb = "limb" if ctx.limb_sharded(ell) else None
+    return P(*(None,) * (ndim - 2), limb, "coef")
+
+
+def shard_poly(p, ctx: DistContext | None = None):
+    """Host/natural RnsPoly → layout-permuted, mesh-placed RnsPoly."""
+    ctx = ctx or _require()
+    perm, _ = dist_layout(p.N, ctx.submodules(p.N), ctx.cs, p.domain)
+    data = np.asarray(p.data)[..., perm]
+    sharding = NamedSharding(ctx.mesh, _poly_spec(data.ndim, p.ell, ctx))
+    return type(p)(jax.device_put(data, sharding), p.basis, p.domain)
+
+
+def unshard_poly(p, ctx: DistContext | None = None):
+    """Layout-permuted RnsPoly → gathered natural-order RnsPoly."""
+    ctx = ctx or _require()
+    _, inv = dist_layout(p.N, ctx.submodules(p.N), ctx.cs, p.domain)
+    return type(p)(jnp.asarray(np.asarray(p.data)[..., inv]), p.basis, p.domain)
+
+
+def shard_ciphertext(ct, ctx: DistContext | None = None):
+    return dataclasses.replace(ct, a=shard_poly(ct.a, ctx),
+                               b=shard_poly(ct.b, ctx))
+
+
+def unshard_ciphertext(ct, ctx: DistContext | None = None):
+    return dataclasses.replace(ct, a=unshard_poly(ct.a, ctx),
+                               b=unshard_poly(ct.b, ctx))
+
+
+def shard_eval_key(ek, ctx: DistContext | None = None):
+    """EvalKey with every digit poly permuted into the scope's NTT layout.
+
+    The PRNG a-halves are expanded first (natural order, as keygen made
+    them) and stored permuted in the new key's cache — regenerating them
+    lazily inside the scope would produce natural-order data.
+    """
+    ctx = ctx or _require()
+    N = ek.b[0].N
+    perm = jnp.asarray(dist_layout(N, ctx.submodules(N), ctx.cs, "ntt")[0])
+    lay = lambda p: type(p)(jnp.take(p.data, perm, axis=-1), p.basis, p.domain)
+    return dataclasses.replace(ek, b=[lay(p) for p in ek.b],
+                               _a_cache=[lay(p) for p in ek.a()],
+                               _level_cache=None)
+
+
+def shard_keyset(keys, ctx: DistContext | None = None):
+    """KeySet whose relin + galois keys live in the scope's layout (the sk
+    is shared by reference — decryption happens outside the scope)."""
+    ctx = ctx or _require()
+    return dataclasses.replace(
+        keys, relin=shard_eval_key(keys.relin, ctx),
+        galois={g: shard_eval_key(ek, ctx) for g, ek in keys.galois.items()},
+        _stack_cache={})
+
+
+# -- sharded primitives (the dispatch targets of poly/bconv under a scope) ---
+
+_prog_cache: dict = {}
+
+
+def sharded_ntt(ctx: DistContext, x, basis, forward: bool = True):
+    """Batched four-step (i)NTT under the scope's mesh — ONE all-to-all.
+
+    ``x``: (…, ℓ, N) in the coefficient layout (forward) or NTT layout
+    (inverse); leading dims (ciphertext components, serve batches, rotation
+    sets) ride through the shard_map body unchanged.
+    """
+    basis = tuple(basis)
+    N = int(x.shape[-1])
+    R = ctx.submodules(N)
+    limb_sharded = ctx.limb_sharded(int(x.shape[-2]))
+    key = ("ntt", ctx.mesh, basis, N, R, forward, x.ndim, limb_sharded)
+    prog = _prog_cache.get(key)
+    if prog is None:
+        prog = _build_dist_ntt(ctx.mesh, basis, N, R, forward, x.ndim,
+                               limb_sharded)
+        _prog_cache[key] = prog
+    fn, consts = prog
+    for kind, n in _cost.predict_collectives(
+            "ntt" if forward else "intt", ctx.cm).items():
+        _kcfg.count_collective(kind, n, shards=ctx.cm.n_cores)
+    return fn(x, *consts)
+
+
+def _build_dist_ntt(mesh, basis, N, R, forward, ndim, limb_sharded):
+    fc = const_cache.device_four_step_consts(basis, N, R)
+    C = N // R
+    cs = _axis_size(mesh, "coef")
+    limb = "limb" if limb_sharded else None
+    data_spec = P(*(None,) * (ndim - 2), limb, "coef")
+
+    def fwd(x, *flat):
+        col = _consts_from(flat[:12])
+        tw, tws, rowp, rowps, q, brev_c = flat[12:]
+        shp = x.shape[:-1]
+        A = x.reshape(*shp, R, C // cs)              # full n₁, local n₂ slice
+        A = jnp.moveaxis(A, -1, -3)
+        A = nttm.ntt(A, col)                         # local column phase
+        A = jnp.moveaxis(A, -3, -1)
+        A = mm.mulmod_shoup(A, tw, tws, q[..., None])
+        if cs > 1:                                   # the §III-B shuffle
+            A = lax.all_to_all(A, "coef", split_axis=A.ndim - 2,
+                               concat_axis=A.ndim - 1, tiled=True)
+        A = nttm._cyclic_dft(A, rowp, rowps, brev_c, q)  # local row phase
+        return A.reshape(*shp, -1)                   # k₁-sharded NTT layout
+
+    def inv(x, *flat):
+        col = _consts_from(flat[:12])
+        twi, twis, rowpi, rowpis, cinv, cinvs, q, brev_c = flat[12:]
+        shp = x.shape[:-1]
+        B = x.reshape(*shp, R // cs, C)
+        B = nttm._cyclic_dft(B, rowpi, rowpis, brev_c, q)
+        B = mm.mulmod_shoup(B, cinv[..., None], cinvs[..., None], q[..., None])
+        if cs > 1:
+            B = lax.all_to_all(B, "coef", split_axis=B.ndim - 1,
+                               concat_axis=B.ndim - 2, tiled=True)
+        B = mm.mulmod_shoup(B, twi, twis, q[..., None])
+        B = jnp.moveaxis(B, -1, -3)
+        B = nttm.intt(B, col)
+        B = jnp.moveaxis(B, -3, -1)
+        return B.reshape(*shp, -1)
+
+    limbv = P(limb, None)
+    col_specs = (limbv,) * 11 + (P(None),)
+    tw3 = P(limb, None, "coef")
+    if forward:
+        extra = [(fc.twiddle, tw3), (fc.twiddle_shoup, tw3),
+                 (fc.row_pow, limbv), (fc.row_pow_shoup, limbv),
+                 (fc.q, limbv), (fc.brev_c, P(None))]
+        body = fwd
+    else:
+        extra = [(fc.twiddle_inv, tw3), (fc.twiddle_inv_shoup, tw3),
+                 (fc.row_pow_inv, limbv), (fc.row_pow_inv_shoup, limbv),
+                 (fc.c_inv, limbv), (fc.c_inv_shoup, limbv),
+                 (fc.q, limbv), (fc.brev_c, P(None))]
+        body = inv
+    specs = (data_spec,) + col_specs + tuple(s for _, s in extra)
+    sm = shard_map(body, mesh=mesh, in_specs=specs, out_specs=data_spec,
+                   check_vma=False)
+    return jax.jit(sm), tuple(fc.col) + tuple(a for a, _ in extra)
+
+
+def sharded_bconv(ctx: DistContext, x, src, dst):
+    """Mesh-mapped BConv: ARK / limb-dup / local per cost_model.bconv_method.
+
+    The q̂⁻¹ input scaling is limb-local (plain sharded eltwise); only the
+    K×ℓ table product and its collectives run inside shard_map.  "local"
+    (coefficient scattering: every core holds all limbs of its N/cs slice)
+    is both the L_c = 1 degenerate case and the fallback when the dst count
+    doesn't divide the limb-cluster count — zero collectives either way.
+    """
+    src, dst = tuple(src), tuple(dst)
+    N = int(x.shape[-1])
+    method = _cost.bconv_method(ctx.cm, len(src), len(dst), N=N)
+    c = const_cache.device_bconv_consts(src, dst)
+    t = mm.mulmod_shoup(x, c.qhat_inv, c.qhat_inv_shoup, c.q_src)
+    for kind, n in _cost.predict_collectives(
+            "bconv", ctx.cm, n_in=len(src), n_out=len(dst), N=N).items():
+        _kcfg.count_collective(kind, n, shards=ctx.cm.n_cores)
+    if method == "local":
+        terms = mm.mulmod_shoup(t[..., None, :, :], c.table[:, :, None],
+                                c.table_shoup[:, :, None], c.q_dst[:, None])
+        return bc.lazy_sum_mod(terms, c.q_dst, c.mu_hi, c.mu_lo, axis=-2)
+    limb_in = ctx.limb_sharded(len(src))
+    key = ("bconv", ctx.mesh, len(src), len(dst), x.ndim, method, limb_in)
+    fn = _prog_cache.get(key)
+    if fn is None:
+        fn = _build_dist_bconv(ctx.mesh, len(dst), x.ndim, method, limb_in)
+        _prog_cache[key] = fn
+    return fn(t, c.table, c.table_shoup, c.q_dst, c.mu_hi, c.mu_lo)
+
+
+def _build_dist_bconv(mesh, K, ndim, method, limb_in):
+    lc = _axis_size(mesh, "limb")
+    K_loc = K // lc
+    lead = (None,) * (ndim - 2)
+    in_spec = P(*lead, "limb" if limb_in else None, "coef")
+    out_spec = P(*lead, "limb", "coef")
+
+    def matmul(t, table, table_s, qd, mu_hi, mu_lo):
+        terms = mm.mulmod_shoup(t[..., None, :, :], table[:, :, None],
+                                table_s[:, :, None], qd[:, None])
+        return bc.lazy_sum_mod(terms, qd, mu_hi, mu_lo, axis=-2)
+
+    if method == "limbdup":
+        def fn(t, table, table_s, qd, mu_hi, mu_lo):
+            if limb_in and lc > 1:       # broadcast within the coef cluster
+                t = lax.all_gather(t, "limb", axis=t.ndim - 2, tiled=True)
+            i = lax.axis_index("limb")
+            sl = lambda a: lax.dynamic_slice_in_dim(a, i * K_loc, K_loc, 0)
+            return matmul(t, sl(table), sl(table_s), sl(qd), sl(mu_hi),
+                          sl(mu_lo))    # outputs born on their owner
+    else:  # ark
+        def fn(t, table, table_s, qd, mu_hi, mu_lo):
+            t = lax.all_to_all(t, "limb", split_axis=t.ndim - 1,
+                               concat_axis=t.ndim - 2, tiled=True)
+            out = matmul(t, table, table_s, qd, mu_hi, mu_lo)
+            return lax.all_to_all(out, "limb", split_axis=out.ndim - 2,
+                                  concat_axis=out.ndim - 1, tiled=True)
+
+    rep = P(None, None)
+    sm = shard_map(fn, mesh=mesh,
+                   in_specs=(in_spec, rep, rep, rep, rep, rep),
+                   out_specs=out_spec, check_vma=False)
+    return jax.jit(sm)
+
+
+def _galois_layout_table(N: int, R: int, g: int):
+    """Device-staged layout-conjugated automorphism table T = L⁻¹∘perm∘L:
+    out_layout[p] = in_layout[T[p]] reproduces φ_g on NTT-layout data."""
+    def build():
+        from . import poly as _pl
+        L = ntt_layout_perm(N, R)
+        Linv = np.empty_like(L)
+        Linv[L] = np.arange(N, dtype=np.int32)
+        return Linv[_pl.automorphism_perm(N, g)[L]].astype(np.int32)
+    return const_cache.device_table(("dist_galois", N, R, g), build)
+
+
+def sharded_galois(ctx: DistContext, x, N: int, g: int):
+    """Slot-parallel automorphism: ONE all-gather along "coef", then each
+    core gathers its rows through the layout-conjugated perm table."""
+    R = ctx.submodules(N)
+    T = _galois_layout_table(N, R, g)
+    limb_sharded = ctx.limb_sharded(int(x.shape[-2]))
+    key = ("auto", ctx.mesh, N, x.ndim, limb_sharded)
+    fn = _prog_cache.get(key)
+    if fn is None:
+        fn = _build_dist_galois(ctx.mesh, x.ndim, limb_sharded)
+        _prog_cache[key] = fn
+    for kind, n in _cost.predict_collectives("auto", ctx.cm).items():
+        _kcfg.count_collective(kind, n, shards=ctx.cm.n_cores)
+    return fn(x, T)
+
+
+def _build_dist_galois(mesh, ndim, limb_sharded):
+    cs = _axis_size(mesh, "coef")
+    limb = "limb" if limb_sharded else None
+    data_spec = P(*(None,) * (ndim - 2), limb, "coef")
+
+    def fn(x, T):
+        n_loc = x.shape[-1]
+        if cs > 1:
+            full = lax.all_gather(x, "coef", axis=x.ndim - 1, tiled=True)
+            j = lax.axis_index("coef")
+            Tl = lax.dynamic_slice_in_dim(T, j * n_loc, n_loc, 0)
+        else:
+            full, Tl = x, T
+        return jnp.take(full, Tl, axis=-1)
+
+    sm = shard_map(fn, mesh=mesh, in_specs=(data_spec, P(None)),
+                   out_specs=data_spec, check_vma=False)
+    return jax.jit(sm)

@@ -63,12 +63,22 @@ class RnsPoly:
         if self.domain == NTT:
             return self
         trace.record("ntt", int(np.prod(self.data.shape[:-1])), self.N)
+        from . import distributed as dist  # lazy: distributed imports bconv
+        ctx = dist.dist_active()
+        if ctx is not None:
+            return RnsPoly(dist.sharded_ntt(ctx, self.data, self.basis, True),
+                           self.basis, NTT)
         return RnsPoly(nttm.ntt(self.data, self.c()), self.basis, NTT)
 
     def to_coeff(self) -> "RnsPoly":
         if self.domain == COEFF:
             return self
         trace.record("intt", int(np.prod(self.data.shape[:-1])), self.N)
+        from . import distributed as dist
+        ctx = dist.dist_active()
+        if ctx is not None:
+            return RnsPoly(dist.sharded_ntt(ctx, self.data, self.basis, False),
+                           self.basis, COEFF)
         return RnsPoly(nttm.intt(self.data, self.c()), self.basis, COEFF)
 
     # -- ring ops (domain-agnostic element-wise; mul requires NTT) -----------
@@ -133,7 +143,11 @@ class RnsPoly:
         """Apply φ as an NTT-domain index permutation (natural order).
 
         ``perm`` may be a host numpy vector or an already-staged device array
-        (``jnp.asarray`` is a no-op for the latter — zero uploads).
+        (``jnp.asarray`` is a no-op for the latter — zero uploads).  Natural
+        order ONLY: under an active ``dist_scope`` the data lives in the
+        four-step NTT layout, so callers must go through
+        :meth:`automorphism_by_gelt`, which conjugates the perm by the
+        layout and shards the gather.
         """
         assert self.domain == NTT
         trace.record("auto", int(np.prod(self.data.shape[:-1])), self.N)
@@ -143,6 +157,13 @@ class RnsPoly:
     def automorphism_by_gelt(self, g: int) -> "RnsPoly":
         """φ_g via the device-staged perm table from ``const_cache`` — the
         steady-state rotation path performs zero per-call perm uploads."""
+        from . import distributed as dist
+        ctx = dist.dist_active()
+        if ctx is not None:
+            assert self.domain == NTT
+            trace.record("auto", int(np.prod(self.data.shape[:-1])), self.N)
+            return RnsPoly(dist.sharded_galois(ctx, self.data, self.N, g),
+                           self.basis, NTT)
         return self.automorphism(const_cache.device_galois_perm(self.N, g))
 
 

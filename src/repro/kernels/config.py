@@ -264,6 +264,48 @@ def launches_since(snapshot: dict) -> dict:
             if n - snapshot.get(fam, 0)}
 
 
+# ----------------------------------------------------------------------------
+# Collective accounting (distributed engine, repro.core.distributed)
+# ----------------------------------------------------------------------------
+
+# Program-grain collective tally: one entry per collective op in a dispatched
+# program ("all_to_all", "all_gather", …) — what cost_model.predict_collectives
+# predicts and what the compiled HLO contains.  The per-shard tally multiplies
+# by the participating device count (every mesh core executes its slice of
+# the collective), the chiplet-grain view of the same traffic.
+_collectives: collections.Counter = collections.Counter()
+_collective_shards: collections.Counter = collections.Counter()
+
+
+def count_collective(kind: str, n: int = 1, *, shards: int = 1) -> None:
+    """Record ``n`` program-level collectives of ``kind`` ("all_to_all",
+    "all_gather", …), each executed by ``shards`` mesh cores."""
+    _collectives[kind] += n
+    _collective_shards[kind] += n * shards
+
+
+def collective_counts() -> dict:
+    """Program-grain per-kind collective counts since process start."""
+    return dict(_collectives)
+
+
+def collective_shard_counts() -> dict:
+    """Per-shard (device-grain) collective counts since process start."""
+    return dict(_collective_shards)
+
+
+def collectives_since(snapshot: dict) -> dict:
+    """Per-kind collective deltas vs a :func:`collective_counts` snapshot."""
+    return {k: n - snapshot.get(k, 0) for k, n in _collectives.items()
+            if n - snapshot.get(k, 0)}
+
+
+def reset_collectives() -> None:
+    """Zero both collective tallies (bench/test isolation)."""
+    _collectives.clear()
+    _collective_shards.clear()
+
+
 class count_region:
     """Context manager capturing the per-family launch deltas of a region.
 
@@ -278,11 +320,14 @@ class count_region:
 
     def __enter__(self):
         self._before = launch_counts()
+        self._before_coll = collective_counts()
         self.deltas: dict = {}
+        self.collectives: dict = {}
         return self
 
     def __exit__(self, *exc):
         self.deltas = launches_since(self._before)
+        self.collectives = collectives_since(self._before_coll)
         return False
 
     @property

@@ -111,6 +111,22 @@ def collective_bytes(hlo_text: str) -> float:
     return sum(c.wire_bytes for c in parse_collectives(hlo_text))
 
 
+def collective_instruction_counts(hlo_text: str) -> dict[str, int]:
+    """Number of collective *instructions* per kind (not bytes).
+
+    The distributed engine's structural claims are instruction counts — the
+    four-step NTT compiles to exactly ONE all-to-all, limb-dup BConv to one
+    all-gather and zero all-to-alls — so tests cross-check the program-level
+    counters in :mod:`repro.kernels.config` against the compiled HLO text.
+    Start/done pairs of async collectives count once (the regex matches the
+    ``-start`` form only).
+    """
+    counts: dict[str, int] = {}
+    for c in parse_collectives(hlo_text):
+        counts[c.kind] = counts.get(c.kind, 0) + 1
+    return counts
+
+
 def collective_summary(hlo_text: str) -> dict[str, float]:
     summary: dict[str, float] = {}
     for c in parse_collectives(hlo_text):

@@ -23,10 +23,28 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_fhe_mesh(*, multi_pod: bool = False, limb_clusters: int = 4):
+def make_fhe_mesh(*, multi_pod: bool = False, limb_clusters: int = 4,
+                  n_cores: int | None = None):
     """CiFHER cluster mesh: ``limb`` = limb clusters, ``coef`` = cores per
-    cluster (block size); 256 cores per pod, ciphertext batch across pods."""
-    coef = 256 // limb_clusters
+    cluster (block size); ciphertext batch across pods when ``multi_pod``.
+
+    ``n_cores`` is the per-pod core count; by default it is derived from the
+    actual device count (this used to be hard-coded to 256, so the function
+    could not build a mesh on any host without exactly 256/512 devices).
+    """
+    pods = 2 if multi_pod else 1
+    if n_cores is None:
+        n_dev = len(jax.devices())
+        if n_dev % pods:
+            raise ValueError(
+                f"multi_pod mesh needs an even device count, got {n_dev}")
+        n_cores = n_dev // pods
+    if limb_clusters < 1 or n_cores % limb_clusters:
+        raise ValueError(
+            f"limb_clusters={limb_clusters} does not divide the per-pod "
+            f"core count {n_cores} — choose a divisor (devices: "
+            f"{len(jax.devices())}, pods: {pods})")
+    coef = n_cores // limb_clusters
     if multi_pod:
         return jax.make_mesh((2, limb_clusters, coef), ("pod", "limb", "coef"))
     return jax.make_mesh((limb_clusters, coef), ("limb", "coef"))

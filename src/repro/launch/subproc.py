@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import subprocess
 import sys
 
@@ -16,8 +17,14 @@ import sys
 def run_with_devices(n_devices: int, module: str, *args: str,
                      timeout: int = 900, expect_json: bool = True):
     env = dict(os.environ)
+    # strip any inherited device-count flag first: XLA resolves duplicate
+    # flags last-wins, so under a CI job that already exports
+    # --xla_force_host_platform_device_count=8 a naive prepend would have
+    # the PARENT's count override the one requested here
+    inherited = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                       env.get("XLA_FLAGS", "")).strip()
     env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices} "
-                        + env.get("XLA_FLAGS", "")).strip()
+                        + inherited).strip()
     root = os.path.dirname(os.path.dirname(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__)))))
     env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + env.get("PYTHONPATH", "")
